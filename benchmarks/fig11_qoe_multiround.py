@@ -1,0 +1,30 @@
+"""Fig. 11 — average QoE vs request rate on Multi-Round ShareGPT
+(3x longer inputs; §6.2: Andes gains up to 3.2x QoE, 1.1-1.3x capacity)."""
+from __future__ import annotations
+
+from benchmarks import fig10_qoe_sharegpt as fig10
+
+RATES = (1.6, 2.0, 2.4, 2.8, 3.2)
+
+
+def run(quick: bool = False):
+    old = fig10.RATES
+    fig10.RATES = RATES
+    try:
+        rows = fig10.run(quick=quick, dataset="multiround")
+    finally:
+        fig10.RATES = old
+    for r in rows:
+        r["name"] = r["name"].replace("fig10", "fig11")
+    return rows
+
+
+def validate(rows) -> str:
+    d = rows[-1]
+    return (f"multi-round capacity ratio {d['capacity_ratio']}x "
+            f"(paper: 1.1-1.3x); max QoE gain {d['max_qoe_gain']}x")
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

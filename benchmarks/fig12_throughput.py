@@ -1,0 +1,38 @@
+"""Fig. 12 — token generation throughput vs request rate: Andes pays <= ~10%
+at its operating points (§6.2.3)."""
+from __future__ import annotations
+
+from benchmarks.common import run_point
+
+RATES = (2.4, 3.0, 3.6, 4.2)
+
+
+def run(quick: bool = False):
+    rows = []
+    drops = []
+    for rate in (RATES[:3] if quick else RATES):
+        thpt = {}
+        for sched in ("fcfs", "andes"):
+            res = run_point(sched, rate, quick=quick)
+            thpt[sched] = res.throughput()
+        drop = 1.0 - thpt["andes"] / max(thpt["fcfs"], 1e-9)
+        drops.append(drop)
+        rows.append({
+            "name": f"fig12/rate={rate}",
+            "thpt_fcfs": round(thpt["fcfs"], 1),
+            "thpt_andes": round(thpt["andes"], 1),
+            "drop_pct": round(100 * drop, 1),
+        })
+    rows.append({"name": "fig12/derived",
+                 "max_drop_pct": round(100 * max(drops), 1)})
+    return rows
+
+
+def validate(rows) -> str:
+    return (f"max throughput drop {rows[-1]['max_drop_pct']}% "
+            f"(paper: <=10% at operating points)")
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

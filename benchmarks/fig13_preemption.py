@@ -1,0 +1,31 @@
+"""Fig. 13 — preemption frequency per request stays low (<= ~0.5 at
+reasonable QoE, bounded by ~k-1 under k-fold overload; §4.2 #4, §6.2.3)."""
+from __future__ import annotations
+
+from benchmarks.common import run_point
+
+RATES = (2.4, 3.0, 3.6, 4.2)
+
+
+def run(quick: bool = False):
+    rows = []
+    for rate in (RATES[:3] if quick else RATES):
+        for sched in ("andes", "round_robin"):
+            res = run_point(sched, rate, quick=quick)
+            rows.append({
+                "name": f"fig13/{sched}/rate={rate}",
+                "preempt_per_req": round(res.preemption_freq(), 3),
+                "avg_qoe": round(res.avg_qoe(), 3),
+            })
+    return rows
+
+
+def validate(rows) -> str:
+    andes = [r for r in rows if "/andes/" in r["name"]]
+    ok = all(r["preempt_per_req"] <= 1.3 for r in andes)
+    return f"Andes preemptions/request <= ~1 across rates: {ok}"
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,36 @@
+"""Fig. 21 (Appendix E) — normalized latency (end-to-end latency / output
+length): comparable at low rates, much lower for Andes at high rates."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import run_point
+
+RATES = (2.4, 3.2, 4.0, 4.8)
+
+
+def run(quick: bool = False):
+    rows = []
+    for rate in RATES:   # the Andes win shows at the high-rate end
+        vals = {}
+        for sched in ("fcfs", "andes"):
+            res = run_point(sched, rate, n=1500 if quick else 2000, quick=False)
+            vals[sched] = float(np.median(res.normalized_latencies()))
+        rows.append({
+            "name": f"fig21/rate={rate}",
+            "norm_lat_fcfs_s": round(vals["fcfs"], 3),
+            "norm_lat_andes_s": round(vals["andes"], 3),
+        })
+    return rows
+
+
+def validate(rows) -> str:
+    last = rows[-1]
+    return (f"at highest rate Andes normalized latency "
+            f"{last['norm_lat_andes_s']}s <= FCFS {last['norm_lat_fcfs_s']}s: "
+            f"{last['norm_lat_andes_s'] <= last['norm_lat_fcfs_s'] * 1.05}")
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

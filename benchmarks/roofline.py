@@ -1,0 +1,95 @@
+"""Roofline analysis (deliverable g): render the per-(arch x shape x mesh)
+table from the dry-run JSONs in experiments/dryrun/.
+
+  compute    = HLO_FLOPs(per dev)  / peak_FLOPs(chip)
+  memory     = HLO_bytes(per dev)  / HBM_bw(chip)
+  collective = coll_bytes(per dev) / link_bw(chip)
+
+plus MODEL_FLOPS = 6·N·D (train) or 2·N_active·D (serve) and the
+useful-compute ratio MODEL_FLOPS / (HLO_FLOPs x chips), which exposes remat
+recompute and dispatch/replication waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load_results(tag: str = "pod") -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*_{tag}.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def summarize(r: Dict) -> Dict:
+    rf = r["roofline"]
+    total = rf["compute_s"] + rf["memory_s"] + rf["collective_s"]
+    return {
+        "arch": r["arch"],
+        "shape": r["shape"],
+        "mesh": r["mesh"],
+        "compute_s": rf["compute_s"],
+        "memory_s": rf["memory_s"],
+        "collective_s": rf["collective_s"],
+        "dominant": rf["dominant"].replace("_s", ""),
+        "useful_flops_ratio": rf["useful_flops_ratio"],
+        "bytes_per_dev_gb": (r["memory"]["argument_bytes"]
+                             + r["memory"]["temp_bytes"]
+                             + r["memory"]["output_bytes"]) / 1e9,
+        "step_lower_bound_s": max(rf["compute_s"], rf["memory_s"],
+                                  rf["collective_s"]),
+        "balance": rf["compute_s"] / total if total else 0.0,
+    }
+
+
+def table(tag: str = "pod") -> List[Dict]:
+    return [summarize(r) for r in load_results(tag)]
+
+
+def render(tag: str = "pod") -> str:
+    rows = table(tag)
+    if not rows:
+        return "(no dry-run artifacts; run python -m repro.launch.dryrun --all)"
+    hdr = (f"{'arch':24s} {'shape':12s} {'compute':>10s} {'memory':>10s} "
+           f"{'collect':>10s} {'dominant':>10s} {'useful':>7s} {'GB/dev':>8s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
+        lines.append(
+            f"{r['arch']:24s} {r['shape']:12s} "
+            f"{r['compute_s']:10.3e} {r['memory_s']:10.3e} "
+            f"{r['collective_s']:10.3e} {r['dominant']:>10s} "
+            f"{r['useful_flops_ratio']:7.2f} {r['bytes_per_dev_gb']:8.1f}"
+        )
+    return "\n".join(lines)
+
+
+def run(quick: bool = False):
+    rows = []
+    for r in table("pod"):
+        rows.append({
+            "name": f"roofline/{r['arch']}/{r['shape']}",
+            "dominant": r["dominant"],
+            "bound_s": round(r["step_lower_bound_s"], 4),
+            "useful": round(r["useful_flops_ratio"], 2),
+        })
+    return rows
+
+
+def validate(rows) -> str:
+    n = len(rows)
+    doms = {}
+    for r in rows:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    return f"{n}/40 combos analyzed; dominant terms: {doms}"
+
+
+if __name__ == "__main__":
+    print(render("pod"))
+    print()
+    print(render("multipod"))

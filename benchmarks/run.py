@@ -1,0 +1,82 @@
+"""Benchmark entrypoint: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV per row plus each module's
+validation line against the paper's claims. ``--full`` uses the full trace
+lengths (default is the quick profile suitable for CI).
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only fig10,...]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from benchmarks import (
+    appendixA_objectives,
+    fig03_motivation,
+    fig10_qoe_sharegpt,
+    fig11_qoe_multiround,
+    fig12_throughput,
+    fig13_preemption,
+    fig15_robustness,
+    fig16_18_sensitivity,
+    fig21_norm_latency,
+    kernels_micro,
+    roofline,
+    table4_breakdown,
+)
+
+MODULES = {
+    "fig03": fig03_motivation,
+    "fig10": fig10_qoe_sharegpt,
+    "fig11": fig11_qoe_multiround,
+    "fig12": fig12_throughput,
+    "fig13": fig13_preemption,
+    "table4": table4_breakdown,
+    "fig15": fig15_robustness,
+    "fig16_18": fig16_18_sensitivity,
+    "fig21": fig21_norm_latency,
+    "appendixA": appendixA_objectives,
+    "kernels": kernels_micro,
+    "roofline": roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full trace lengths (slower, tighter numbers)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module keys")
+    args = ap.parse_args()
+    quick = not args.full
+    keys = args.only.split(",") if args.only else list(MODULES)
+
+    print("name,us_per_call,derived")
+    summaries = []
+    for key in keys:
+        mod = MODULES[key]
+        t0 = time.perf_counter()
+        try:
+            rows = mod.run(quick=quick)
+        except Exception as e:  # noqa: BLE001 — surface failures in CSV
+            print(f"{key},0,ERROR:{e!r}")
+            summaries.append((key, f"ERROR {e!r}"))
+            continue
+        us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+        for r in rows:
+            derived = {k: v for k, v in r.items() if k != "name"}
+            print(f"{r['name']},{r.get('us_per_call', round(us, 1))},"
+                  f"\"{json.dumps(derived)}\"")
+        if hasattr(mod, "validate"):
+            summaries.append((key, mod.validate(rows)))
+
+    print("\n== validation against paper claims ==", file=sys.stderr)
+    for key, line in summaries:
+        print(f"  {key:10s} {line}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

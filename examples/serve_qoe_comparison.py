@@ -1,0 +1,44 @@
+"""End-to-end driver (deliverable b): serve a batched request trace at the
+paper's OPT-66B deployment point and compare FCFS / Round-Robin / Andes on
+QoE, TTFT, throughput, and preemption — Figure 10 in one script.
+
+Run:  PYTHONPATH=src python examples/serve_qoe_comparison.py [--rate 4.2]
+"""
+import argparse
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import A100_4X, LatencyModel, SchedulerConfig, make_scheduler
+from repro.serving.simulator import ServingSimulator, SimConfig
+from repro.workload import make_workload
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--rate", type=float, default=4.2)
+ap.add_argument("--requests", type=int, default=1200)
+ap.add_argument("--kv-capacity", type=int, default=65_000)
+args = ap.parse_args()
+
+cfg = get_config("opt-66b")
+lat = LatencyModel(cfg, A100_4X)
+print(f"OPT-66B on 4xA100 | rate {args.rate} req/s | "
+      f"M = {args.kv_capacity} KV tokens\n")
+
+hdr = (f"{'scheduler':>12} {'avgQoE':>7} {'p10':>6} {'p50':>6} "
+       f"{'TTFTp50':>8} {'TTFTp90':>8} {'tok/s':>7} {'preempt':>8}")
+print(hdr)
+print("-" * len(hdr))
+for name in ("fcfs", "round_robin", "andes"):
+    wl = make_workload(args.requests, args.rate, seed=7)
+    sched = make_scheduler(name, args.kv_capacity, lat, SchedulerConfig())
+    res = ServingSimulator(
+        sched, lat, SimConfig(kv_capacity_tokens=args.kv_capacity)
+    ).run(wl)
+    q, t = res.qoes(), res.ttfts()
+    print(f"{name:>12} {res.avg_qoe():7.3f} {np.percentile(q,10):6.2f} "
+          f"{np.percentile(q,50):6.2f} {np.percentile(t,50):8.2f} "
+          f"{np.percentile(t,90):8.2f} {res.throughput():7.1f} "
+          f"{res.preemption_freq():8.2f}")
+
+print("\nAndes keeps TTFT ~sub-second and lifts the QoE floor while paying "
+      "only a few % of throughput — the paper's Figure 10/Table 4 story.")

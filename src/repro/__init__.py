@@ -1,0 +1,14 @@
+"""repro: Andes (QoE-aware LLM text streaming) as a multi-pod JAX framework.
+
+Public surface:
+    repro.core      — QoE metric, schedulers, latency model (the paper)
+    repro.serving   — engine, simulator, KV manager, requests
+    repro.models    — 10-architecture model zoo behind one Model API
+    repro.kernels   — Pallas TPU kernels + oracles
+    repro.training  — optimizer, train step, data, checkpoints
+    repro.workload  — arrivals, length distributions, QoE traces
+    repro.configs   — architecture + input-shape registry
+    repro.launch    — mesh, dry-run, serve/train launchers
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,29 @@
+"""The paper's primary contribution: QoE definition + QoE-aware scheduling."""
+from repro.core.latency_model import (
+    A40_4X,
+    A100_4X,
+    TPU_V5E,
+    TPU_V5E_POD,
+    HardwareSpec,
+    LatencyModel,
+)
+from repro.core.qoe import FluidQoE, QoESpec, pace_delivery, qoe_exact
+from repro.core.scheduler import (
+    SCHEDULERS,
+    AndesDPScheduler,
+    AndesScheduler,
+    FCFSScheduler,
+    RoundRobinScheduler,
+    Scheduler,
+    SchedulerConfig,
+    make_scheduler,
+)
+from repro.core.token_buffer import TokenBuffer
+
+__all__ = [
+    "QoESpec", "FluidQoE", "pace_delivery", "qoe_exact",
+    "HardwareSpec", "LatencyModel", "TPU_V5E", "TPU_V5E_POD", "A100_4X", "A40_4X",
+    "Scheduler", "SchedulerConfig", "FCFSScheduler", "RoundRobinScheduler",
+    "AndesScheduler", "AndesDPScheduler", "SCHEDULERS", "make_scheduler",
+    "TokenBuffer",
+]

@@ -1,0 +1,370 @@
+"""Request schedulers: FCFS (vLLM default), Round-Robin, and Andes.
+
+Andes (paper §4): at every continuous-batching iteration, choose the set of
+requests to run next by solving the Exact-K-item knapsack
+
+    max Σ gain_i(B) · x_i   s.t.  Σ x_i = B,  Σ l_i x_i ≤ M
+
+over candidate batch sizes B ∈ [B_min, B_max], where
+gain_i(B) = Q_serve,i(B) − Q_wait,i (Eq. 2; alternatives in objectives.py)
+and l_i is the request's KV footprint in tokens. The production solver is
+the greedy packing of Algorithm 1 (priority = gain_i / l_i); the optimal
+3-D DP of Algorithm 2 is provided for comparison (fig18 benchmark).
+
+Optimizations from §4.2 implemented here:
+  #1 selective triggering   — solve only under memory or latency pressure
+  #2 batch-size pruning     — B ∈ [B_min, B_max]
+  #3 greedy packing         — O(N log N)
+  #4 preemption cap         — average preemptions/request ≤ P
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import objectives as obj_lib
+from repro.core.latency_model import LatencyModel
+from repro.core.qoe import FluidQoE
+from repro.core.request import Request, ReqState
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    delta_t: float = 50.0            # prediction horizon Δt (s) (§6.5: insensitive >50)
+    preemption_cap: float = 1.0      # P: avg preemptions per request (§4.2 #4)
+    memory_watermark: float = 0.9    # high-memory trigger (§4.2 #1)
+    objective: str = "avg_qoe"
+    num_batch_candidates: int = 12   # B grid size within [B_min, B_max]
+    state_equiv_tokens: int = 0      # SSM archs: constant weight per request
+    min_remaining_est: float = 64.0  # floor on l̂ − emitted (length estimator)
+    stickiness: float = 0.02         # priority bonus for running requests
+                                     # (hysteresis: suppresses preemption churn
+                                     # when gains are near-tied)
+
+
+class Scheduler:
+    """Base: subclasses return the set of requests that should run next."""
+
+    name = "base"
+
+    def __init__(self, kv_capacity: int, lat: LatencyModel,
+                 cfg: Optional[SchedulerConfig] = None):
+        self.M = kv_capacity
+        self.lat = lat
+        self.cfg = cfg or SchedulerConfig()
+        self.iteration = 0
+        self.total_preemptions = 0
+        self.total_requests = 0
+        # running estimate of the response length l̂ (Eq. 1 cap; the true l
+        # is unknown online — paper §2.3(a))
+        self._len_sum = 0.0
+        self._len_n = 0
+
+    def on_request_finish(self, req: Request) -> None:
+        self._len_sum += req.generated
+        self._len_n += 1
+
+    @property
+    def mean_output_len(self) -> float:
+        return (self._len_sum / self._len_n) if self._len_n >= 10 else 256.0
+
+    # -- bookkeeping helpers -------------------------------------------------
+    def _weights(self, reqs: Sequence[Request]) -> np.ndarray:
+        st = self.cfg.state_equiv_tokens
+        return np.array([r.kv_tokens(st) for r in reqs], np.int64)
+
+    def on_request_arrival(self, req: Request) -> None:
+        self.total_requests += 1
+
+    def record_preemptions(self, n: int) -> None:
+        self.total_preemptions += n
+
+    def schedule(self, now: float, live: List[Request], fluid: FluidQoE
+                 ) -> List[Request]:
+        raise NotImplementedError
+
+
+class FCFSScheduler(Scheduler):
+    """vLLM-style: running requests keep running; waiting requests admitted
+    in arrival order while KV memory allows; preemption only on OOM
+    (most-recent-arrival victim first)."""
+
+    name = "fcfs"
+
+    def schedule(self, now, live, fluid):
+        self.iteration += 1
+        running = [r for r in live if r.state == ReqState.RUNNING]
+        queued = sorted(
+            (r for r in live if r.state in (ReqState.WAITING, ReqState.SWAPPED)),
+            key=lambda r: r.arrival,
+        )
+        st = self.cfg.state_equiv_tokens
+        # OOM handling: victimize most recent arrivals (vLLM recompute policy)
+        running.sort(key=lambda r: r.arrival)
+        used = 0
+        keep: List[Request] = []
+        for r in running:
+            w = r.kv_tokens(st)
+            if used + w <= self.M:
+                keep.append(r)
+                used += w
+        # admit in arrival order (reserve the full prompt)
+        for r in queued:
+            w = r.kv_tokens(st)
+            if used + w <= self.M:
+                keep.append(r)
+                used += w
+            else:
+                break
+        return keep
+
+
+class RoundRobinScheduler(Scheduler):
+    """Fair-share baseline (paper §6.1): every `interval` iterations the
+    running set is rotated to the back of a cyclic queue."""
+
+    name = "round_robin"
+
+    def __init__(self, kv_capacity, lat, cfg=None, interval: int = 50):
+        super().__init__(kv_capacity, lat, cfg)
+        self.interval = interval
+        self._order: List[int] = []      # rids, cyclic service order
+
+    def schedule(self, now, live, fluid):
+        self.iteration += 1
+        by_rid = {r.rid: r for r in live}
+        # maintain cyclic order: append newcomers, drop finished
+        known = set(self._order)
+        for r in sorted(live, key=lambda q: q.arrival):
+            if r.rid not in known:
+                self._order.append(r.rid)
+        self._order = [rid for rid in self._order if rid in by_rid]
+
+        rotate = self.iteration % self.interval == 0
+        if rotate:
+            running_rids = [rid for rid in self._order
+                            if by_rid[rid].state == ReqState.RUNNING]
+            self._order = [rid for rid in self._order
+                           if rid not in running_rids] + running_rids
+
+        st = self.cfg.state_equiv_tokens
+        used = 0
+        keep: List[Request] = []
+        for rid in self._order:
+            r = by_rid[rid]
+            w = r.kv_tokens(st)
+            if used + w <= self.M:
+                keep.append(r)
+                used += w
+        return keep
+
+
+class AndesScheduler(Scheduler):
+    """The paper's QoE-aware scheduler (greedy packing, Algorithm 1)."""
+
+    name = "andes"
+    solver = "greedy"
+
+    def schedule(self, now, live, fluid):
+        self.iteration += 1
+        if not live:
+            return []
+        running = [r for r in live if r.state == ReqState.RUNNING]
+        weights = self._weights(live)
+
+        # ---- Optimization #1: selective triggering -----------------------
+        if not self._triggered(live, running, weights):
+            return self._admit_all(live, weights)
+
+        # ---- Optimization #2: batch size pruning --------------------------
+        b_min, b_max = self._batch_bounds(live, weights)
+        candidates = np.unique(
+            np.linspace(b_min, b_max, self.cfg.num_batch_candidates)
+            .round().astype(int)
+        )
+
+        # ---- evaluate objective per candidate B ---------------------------
+        idx = np.array([r.fluid_idx for r in live])
+        dt = self.cfg.delta_t
+        # l̂ = emitted + E[remaining] (true response length is unknown online)
+        exp_len = fluid.emitted + np.maximum(
+            self.mean_output_len - fluid.emitted, self.cfg.min_remaining_est
+        )
+        q_wait = fluid.predict_qoe(now, dt, 0.0, exp_len=exp_len)[idx]
+        q_now = fluid.qoe_now(now, exp_len=exp_len)[idx]
+        delays_slot = np.zeros(fluid.arrival.size)
+        delays_slot[idx] = [self._serve_delay(r) for r in live]
+        gain_fn = obj_lib.OBJECTIVES[self.cfg.objective]
+        is_running = np.array([r.state == ReqState.RUNNING for r in live])
+
+        best = (-np.inf, None)
+        mean_ctx = float(np.mean([r.context_len for r in live]))
+        for b in candidates:
+            rate = self.lat.token_rate(int(b), int(b * mean_ctx))
+            q_serve = fluid.predict_qoe(now, dt, rate, delays_slot, exp_len)[idx]
+            gains = gain_fn(q_serve, q_wait, q_now)
+            sel, value = self._solve(
+                gains + self.cfg.stickiness * is_running, weights, int(b)
+            )
+            if value > best[0]:
+                best = (value, sel)
+
+        sel = best[1]
+        chosen = [live[i] for i in np.nonzero(sel)[0]]
+
+        # ---- Optimization #4: preemption cap -------------------------------
+        chosen = self._apply_preemption_cap(chosen, running, weights, live)
+        return chosen
+
+    # ------------------------------------------------------------------ parts
+    def _triggered(self, live, running, weights) -> bool:
+        used = sum(r.kv_tokens(self.cfg.state_equiv_tokens) for r in running)
+        total_demand = int(weights.sum())
+        mem_pressure = total_demand > self.cfg.memory_watermark * self.M \
+            or used > self.cfg.memory_watermark * self.M
+        if mem_pressure:
+            return True
+        # latency pressure: token latency at "everyone runs" batch size would
+        # violate the most stringent TDS in the system
+        stiffest = max((r.spec.tds for r in live), default=0.0)
+        if stiffest <= 0:
+            return False
+        lat_all = self.lat.iter_latency(len(live))
+        return lat_all > 1.0 / stiffest
+
+    def _admit_all(self, live, weights) -> List[Request]:
+        order = sorted(range(len(live)), key=lambda i: live[i].arrival)
+        used, keep = 0, []
+        for i in order:
+            if used + weights[i] <= self.M:
+                keep.append(live[i])
+                used += int(weights[i])
+        return keep
+
+    def _batch_bounds(self, live, weights) -> Tuple[int, int]:
+        # B_max: most requests that fit in memory (shortest-first)
+        w_sorted = np.sort(weights)
+        fits = np.cumsum(w_sorted) <= self.M
+        b_max = max(int(fits.sum()), 1)
+        # B_min: largest B still faster than the stiffest TDS requirement
+        stiffest = max((r.spec.tds for r in live), default=1.0)
+        b_min = self.lat.max_batch_from_latency(1.0 / max(stiffest, 1e-9))
+        b_min = max(1, min(b_min, b_max))
+        return b_min, b_max
+
+    def _serve_delay(self, r: Request) -> float:
+        """Time before tokens start flowing if we serve this request."""
+        if r.state == ReqState.RUNNING:
+            return 0.0
+        if r.state == ReqState.SWAPPED:
+            return self.lat.swap_latency(r.context_len)
+        return self.lat.prefill_latency(r.prompt_len)
+
+    def _solve(self, gains, weights, b) -> Tuple[np.ndarray, float]:
+        """Algorithm 1: greedy packing by priority = gain / weight."""
+        pri = gains / np.maximum(weights, 1)
+        order = np.argsort(-pri)
+        sel = np.zeros(len(gains), bool)
+        used = used_n = 0
+        value = 0.0
+        for i in order:
+            if used_n + 1 > b:
+                break
+            if used + weights[i] <= self.M:
+                sel[i] = True
+                used += int(weights[i])
+                used_n += 1
+                value += float(gains[i])
+        return sel, value
+
+    def _apply_preemption_cap(self, chosen, running, weights, live):
+        preempted = [r for r in running if r not in chosen]
+        if not preempted:
+            return chosen
+        budget = self.cfg.preemption_cap * max(self.total_requests, 1) \
+            - self.total_preemptions
+        allowed = max(int(budget), 0)
+        if len(preempted) <= allowed:
+            return chosen
+        # keep the lowest-context (cheapest-to-keep) would-be victims running
+        preempted.sort(key=lambda r: r.context_len)
+        spared = preempted[: len(preempted) - allowed]
+        chosen = list(chosen) + spared
+        # re-enforce memory by dropping admitted (non-running) requests
+        st = self.cfg.state_equiv_tokens
+        used = 0
+        final: List[Request] = []
+        # running first (sparing them is the point), then the rest
+        for r in sorted(chosen, key=lambda r: r.state != ReqState.RUNNING):
+            w = r.kv_tokens(st)
+            if used + w <= self.M:
+                final.append(r)
+                used += w
+        return final
+
+
+class AndesDPScheduler(AndesScheduler):
+    """Andes with the optimal 3-D dynamic program (Algorithm 2).
+
+    Pseudo-polynomial O(M·N·B); memory is bucketed into `granularity`-token
+    units to keep M tractable (the paper runs the DP at full granularity and
+    finds it *slower end-to-end* than greedy — fig18 reproduces that)."""
+
+    name = "andes_dp"
+    solver = "dp"
+
+    def __init__(self, *args, granularity: int = 64, **kw):
+        super().__init__(*args, **kw)
+        self.granularity = granularity
+
+    def _solve(self, gains, weights, b):
+        g = self.granularity
+        w = np.maximum((weights + g - 1) // g, 1).astype(np.int64)
+        m = self.M // g
+        n = len(gains)
+        b = min(b, n)
+        NEG = -1e18
+        # dp[j, c] = best value with j items and c memory units
+        dp = np.full((b + 1, m + 1), NEG)
+        dp[0, 0] = 0.0
+        choice = np.zeros((n, b + 1, m + 1), np.bool_)
+        for i in range(n):
+            wi, gi = int(w[i]), float(gains[i])
+            if wi > m:
+                continue
+            new = dp.copy()
+            cand = dp[: b, : m + 1 - wi] + gi
+            better = cand > new[1:, wi:]
+            new[1:, wi:] = np.where(better, cand, new[1:, wi:])
+            choice[i, 1:, wi:] = better
+            dp = new
+        # best exactly-B solution (paper formulation); fall back to best ≤ B
+        flat = dp[b] if np.any(dp[b] > NEG / 2) else dp.max(axis=0)
+        c = int(np.argmax(flat))
+        j = b if np.any(dp[b] > NEG / 2) else int(np.argmax(dp[:, c]))
+        value = float(dp[j, c]) if dp[j, c] > NEG / 2 else 0.0
+        # backtrack
+        sel = np.zeros(n, bool)
+        for i in range(n - 1, -1, -1):
+            if j > 0 and choice[i, j, c]:
+                sel[i] = True
+                j -= 1
+                c -= int(w[i])
+        if value <= 0.0 and not sel.any():
+            return super()._solve(gains, weights, b)
+        return sel, float(np.sum(gains[sel]))
+
+
+SCHEDULERS = {
+    "fcfs": FCFSScheduler,
+    "round_robin": RoundRobinScheduler,
+    "andes": AndesScheduler,
+    "andes_dp": AndesDPScheduler,
+}
+
+
+def make_scheduler(name: str, kv_capacity: int, lat: LatencyModel,
+                   cfg: Optional[SchedulerConfig] = None, **kw) -> Scheduler:
+    return SCHEDULERS[name](kv_capacity, lat, cfg, **kw)

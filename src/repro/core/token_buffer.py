@@ -1,0 +1,30 @@
+"""Client-side token buffer (paper §5, Fig. 8) — incremental form.
+
+The server streams tokens as fast as it generates them; the buffer shows
+them to the user at the expected TDS, absorbing generation burstiness and
+network jitter. The first token is displayed on arrival.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+
+class TokenBuffer:
+    def __init__(self, tds: float):
+        self.gap = 1.0 / tds
+        self.deliveries: List[float] = []
+        self._last: Optional[float] = None
+
+    def push(self, emit_time: float) -> float:
+        """Register a server emission; returns the user-visible display time."""
+        d = emit_time if self._last is None else max(emit_time, self._last + self.gap)
+        self._last = d
+        self.deliveries.append(d)
+        return d
+
+    def buffered_at(self, t: float) -> int:
+        """Tokens received but not yet displayed at time t."""
+        return sum(1 for d in self.deliveries if d > t)
+
+    def __len__(self) -> int:
+        return len(self.deliveries)

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the serving hot-spots + pure-jnp oracles.
+
+- flash_attention.py — prefill attention (BlockSpec-tiled, causal/GQA/window)
+- decode_attention.py — flash-decode (scalar-prefetch ragged lengths)
+- selective_scan.py — chunked Mamba-1 scan (VMEM-resident state)
+- ops.py — jit'd dispatch wrappers (impl="ref" | "pallas" | "chunked")
+- ref.py — the oracles every kernel is validated against (interpret mode)
+"""

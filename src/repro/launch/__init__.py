@@ -1,0 +1,9 @@
+"""Launchers: mesh construction, multi-pod dry-run, serve, train.
+
+NOTE: do not import repro.launch.dryrun from long-lived processes — its
+first two lines fake 512 host devices (jax locks the device count on first
+init). mesh/serve/train/hlo_stats are safe to import.
+"""
+from repro.launch.mesh import make_debug_mesh, make_production_mesh
+
+__all__ = ["make_production_mesh", "make_debug_mesh"]

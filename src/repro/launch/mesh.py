@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — jax locks the device count on first init,
+and only the dry-run is allowed to fake 512 host devices.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 two-pod (512 chips).
+
+    Axes: "data" carries batch/FSDP, "model" carries tensor/expert
+    parallelism; the "pod" axis extends data parallelism across the
+    cross-pod (DCN) boundary.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 2, model: int = 2, *, pod: int = 0):
+    """Small mesh for tests (requires enough faked host devices)."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    """The mesh axes that carry the batch (pod folds into data)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axis(mesh) -> str:
+    return "model"

@@ -1,0 +1,68 @@
+"""Training launcher (single host; the production mesh path is exercised by
+launch/dryrun.py).
+
+  python -m repro.launch.train --arch llama3-8b --smoke --steps 200
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_smoke_config
+from repro.models import Model
+from repro.training import (
+    OptimizerConfig,
+    build_train_step,
+    init_train_state,
+    packed_batches,
+    save_checkpoint,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = Model(cfg)
+    params, opt = init_train_state(model, jax.random.PRNGKey(args.seed))
+    n_params = sum(p.size for p in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M "
+          f"batch={args.batch}x{args.seq}")
+
+    ocfg = OptimizerConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 1),
+                           total_steps=args.steps)
+    step_fn = jax.jit(build_train_step(model, ocfg,
+                                       microbatches=args.microbatches))
+    data = packed_batches(cfg.vocab_size, args.batch, args.seq, seed=args.seed)
+
+    t0 = time.time()
+    for step in range(1, args.steps + 1):
+        batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+        params, opt, metrics = step_fn(params, opt, batch)
+        if step % args.log_every == 0 or step == 1:
+            toks = args.batch * args.seq * step
+            print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.2f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"tok/s {toks / (time.time() - t0):.0f}")
+    if args.checkpoint:
+        save_checkpoint(args.checkpoint, params, opt, step=args.steps)
+        print(f"saved checkpoint to {args.checkpoint}")
+
+
+if __name__ == "__main__":
+    main()

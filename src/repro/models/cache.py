@@ -1,0 +1,87 @@
+"""Decode caches: static-slot KV cache + SSM recurrent state.
+
+A single pytree carries everything the decode step needs:
+
+  length    (B,)                         valid context tokens per slot
+  k, v      (L_attn, B, S_max, KV, hd)   attention archs (L_attn = number of
+                                         attention *applications*: for the
+                                         shared-block hybrid this is rounds)
+  ssm_h     (L_ssm, B, ...)              Mamba scan state (f32)
+  ssm_conv  (L_ssm, B, K-1, conv_dim)    Mamba conv lookback
+  cross_k/v (L_dec, B, S_enc, KV, hd)    enc-dec cross-attention memory
+  enc_length (B,)                        valid encoder positions
+
+Static shapes are deliberate (TPU/XLA); token-granular *accounting* for the
+scheduler happens in serving/kv_manager.py, not here. See DESIGN.md §3.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def init_cache(
+    cfg: ModelConfig,
+    batch: int,
+    max_seq: int,
+    *,
+    enc_seq: int = 0,
+    dtype=jnp.bfloat16,
+    abstract: bool = False,
+    kv_repeat: int = 1,
+):
+    """Build (or shape-describe, if abstract=True) a decode cache."""
+
+    def arr(shape, dt):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dt)
+        return jnp.zeros(shape, dt)
+
+    cache = {"length": arr((batch,), jnp.int32)}
+    kv, hd = cfg.num_kv_heads * kv_repeat, cfg.head_dim
+
+    n_attn = _num_attn_applications(cfg)
+    if n_attn:
+        cache["k"] = arr((n_attn, batch, max_seq, kv, hd), dtype)
+        cache["v"] = arr((n_attn, batch, max_seq, kv, hd), dtype)
+
+    n_ssm = len(cfg.ssm_layer_ids())
+    if n_ssm:
+        s = cfg.ssm
+        di = cfg.d_inner
+        if s.version == 2:
+            nh = di // s.headdim
+            cache["ssm_h"] = arr((n_ssm, batch, nh, s.headdim, s.d_state), jnp.float32)
+            conv_dim = di + 2 * s.d_state
+        else:
+            cache["ssm_h"] = arr((n_ssm, batch, di, s.d_state), jnp.float32)
+            conv_dim = di
+        cache["ssm_conv"] = arr((n_ssm, batch, s.d_conv - 1, conv_dim), dtype)
+
+    if cfg.kind in ("encdec", "audio"):
+        cache["cross_k"] = arr((cfg.num_layers, batch, enc_seq, kv, hd), dtype)
+        cache["cross_v"] = arr((cfg.num_layers, batch, enc_seq, kv, hd), dtype)
+        cache["enc_length"] = arr((batch,), jnp.int32)
+
+    return cache
+
+
+def _num_attn_applications(cfg: ModelConfig) -> int:
+    if cfg.kind == "ssm":
+        return 0
+    if cfg.hybrid_attn_every:
+        return cfg.num_layers // cfg.hybrid_attn_every
+    return cfg.num_layers
+
+
+def cache_bytes(cfg: ModelConfig, batch: int, max_seq: int, dtype_bytes=2) -> int:
+    """Host-side size estimate (used by the KV manager and roofline)."""
+    total = 0
+    n_attn = _num_attn_applications(cfg)
+    total += 2 * n_attn * batch * max_seq * cfg.num_kv_heads * cfg.head_dim * dtype_bytes
+    total += batch * cfg.ssm_state_bytes()
+    return total

@@ -1,0 +1,236 @@
+"""Unified model API: init / train / prefill / decode / input_specs.
+
+This is the single surface the rest of the framework talks to:
+
+  model = Model(cfg, impl="ref")
+  params = model.init(rng)                      # or model.abstract_params()
+  logits, aux = model.forward_train(params, batch)
+  loss = model.loss(params, batch)
+  cache = model.init_cache(batch=B, max_seq=S)
+  logits, cache = model.prefill(params, batch, cache)
+  logits, cache = model.decode_step(params, tokens, cache)   # "serve_step"
+
+`input_specs(shape)` returns ShapeDtypeStruct stand-ins for every input of
+the phase's step function — the dry-run lowers against these without
+allocating anything.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import cache as cache_lib
+from repro.models import transformer as tfm
+
+
+class Model:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        *,
+        impl: str = "ref",
+        scan_impl: str = "chunked",
+        window: Optional[int] = None,
+        param_dtype=jnp.float32,
+        remat: bool = False,
+        kv_repeat: int = 1,
+        moe_seq_chunk: int = 0,
+        moe_ep_mesh=None,
+    ):
+        self.cfg = cfg
+        self.impl = impl
+        self.scan_impl = scan_impl
+        self.window = window
+        self.param_dtype = param_dtype
+        self.remat = remat
+        # KV-head replication to the TP degree (serving optimization,
+        # EXPERIMENTS.md §Perf hillclimb #1); 1 = paper-faithful baseline
+        self.kv_repeat = kv_repeat
+        # sequence-chunked MoE dispatch (hillclimb #3); 0 = baseline
+        self.moe_seq_chunk = moe_seq_chunk
+        # shard_map expert-parallel dispatch (distributed/moe_ep.py); None =
+        # GSPMD-compiled dispatch
+        self.moe_ep_mesh = moe_ep_mesh
+
+    # ------------------------------------------------------------------ init
+    def init(self, rng, dtype=None):
+        return tfm.init_params(rng, self.cfg, dtype or self.param_dtype)
+
+    def abstract_params(self, dtype=None):
+        dt = dtype or self.param_dtype
+        return jax.eval_shape(
+            lambda r: tfm.init_params(r, self.cfg, dt), jax.random.PRNGKey(0)
+        )
+
+    # ----------------------------------------------------------------- train
+    def forward_train(self, params, batch):
+        return tfm.forward(
+            params, self.cfg, batch, impl=self.impl, scan_impl=self.scan_impl,
+            window=self.window, remat=self.remat,
+            moe_seq_chunk=self.moe_seq_chunk, moe_ep_mesh=self.moe_ep_mesh,
+        )
+
+    def loss(self, params, batch, *, ce_chunk: int = 1024):
+        """Next-token cross-entropy (labels < 0 are masked) + MoE aux.
+
+        The CE is computed *chunked over the sequence* with per-chunk remat:
+        the (tokens, vocab) logits tensor — by far the largest activation at
+        128k vocab x 1M tokens — never materializes beyond one chunk.
+        """
+        h, aux = tfm.forward(
+            params, self.cfg, batch, impl=self.impl, scan_impl=self.scan_impl,
+            window=self.window, remat=self.remat, return_hidden=True,
+            moe_seq_chunk=self.moe_seq_chunk, moe_ep_mesh=self.moe_ep_mesh,
+        )
+        labels = batch["labels"]
+        b, s, d = h.shape
+        chunk = min(ce_chunk, s)
+        while s % chunk:
+            chunk //= 2
+        n = s // chunk
+        hs = jnp.moveaxis(h.reshape(b, n, chunk, d), 1, 0)
+        ls = jnp.moveaxis(labels.reshape(b, n, chunk), 1, 0)
+
+        def ce_chunk_fn(carry, xs):
+            hc, lc = xs
+            logits = tfm.unembed(params, hc).astype(jnp.float32)
+            mask = lc >= 0
+            lab = jnp.maximum(lc, 0)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            nll = -jnp.take_along_axis(logp, lab[..., None], axis=-1)[..., 0]
+            nll = jnp.where(mask, nll, 0.0)
+            return (carry[0] + jnp.sum(nll), carry[1] + jnp.sum(mask)), None
+
+        body = ce_chunk_fn if not self.remat else jax.checkpoint(
+            ce_chunk_fn, policy=jax.checkpoint_policies.nothing_saveable
+        )
+        (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())), (hs, ls))
+        return tot / jnp.maximum(cnt, 1) + aux
+
+    # ----------------------------------------------------------------- serve
+    def init_cache(self, batch: int, max_seq: int, *, enc_seq: int = 0,
+                   dtype=jnp.float32, abstract: bool = False):
+        return cache_lib.init_cache(
+            self.cfg, batch, max_seq, enc_seq=enc_seq, dtype=dtype,
+            abstract=abstract, kv_repeat=self.kv_repeat,
+        )
+
+    def prefill(self, params, batch, cache):
+        """Run the prompt, fill the cache, return last-token logits.
+
+        batch: {"tokens": (B, S) [, "lengths": (B,), "frames", "patch_embeds"]}
+        cache: from init_cache (max_seq >= S). Returns (logits (B, V), cache').
+        """
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        lengths = batch.get("lengths")
+        if lengths is None:
+            lengths = jnp.full((b,), s, jnp.int32)
+
+        n_patch = 0
+        fwd_batch = dict(batch)
+        if cfg.kind == "vlm" and "patch_embeds" in batch:
+            n_patch = batch["patch_embeds"].shape[1]
+        ctx_lengths = lengths + n_patch      # cache positions incl. patches
+
+        if cfg.kind in ("encdec", "audio"):
+            logits, _, parts = tfm.forward(
+                params, cfg, fwd_batch, impl=self.impl, scan_impl=self.scan_impl,
+                collect_cache=True, lengths=lengths,
+            )
+            cache = dict(cache, cross_k=parts["cross_k"], cross_v=parts["cross_v"],
+                         enc_length=batch.get(
+                             "enc_lengths",
+                             jnp.full((b,), batch["frames"].shape[1], jnp.int32)))
+        else:
+            logits, _, parts = tfm.forward(
+                params, cfg, fwd_batch, impl=self.impl, scan_impl=self.scan_impl,
+                window=self.window, collect_cache=True, lengths=ctx_lengths,
+                kv_repeat=self.kv_repeat, moe_seq_chunk=self.moe_seq_chunk,
+                moe_ep_mesh=self.moe_ep_mesh,
+            )
+
+        # write collected per-layer tensors into the (max_seq-sized) cache
+        if "k" in parts:
+            cache = dict(
+                cache,
+                k=jax.lax.dynamic_update_slice(
+                    cache["k"], parts["k"].astype(cache["k"].dtype), (0,) * cache["k"].ndim
+                ),
+                v=jax.lax.dynamic_update_slice(
+                    cache["v"], parts["v"].astype(cache["v"].dtype), (0,) * cache["v"].ndim
+                ),
+            )
+        if "ssm_h" in parts:
+            cache = dict(cache, ssm_h=parts["ssm_h"],
+                         ssm_conv=parts["ssm_conv"].astype(cache["ssm_conv"].dtype))
+
+        cache = dict(cache, length=ctx_lengths.astype(jnp.int32))
+        # last valid logit per request (logits cover text positions only)
+        last = jnp.clip(lengths - 1, 0, logits.shape[1] - 1)
+        logits_last = jnp.take_along_axis(
+            logits, last[:, None, None], axis=1
+        )[:, 0]
+        return logits_last, cache
+
+    def decode_step(self, params, tokens, cache):
+        """tokens (B,) int32 -> (logits (B, V), cache')."""
+        return tfm.decode_step(
+            params, self.cfg, tokens, cache, impl=self.impl,
+            window=self.window, kv_repeat=self.kv_repeat,
+        )
+
+    # ------------------------------------------------------------- dry-run IO
+    def input_specs(self, shape: ShapeConfig, *, act_dtype=jnp.bfloat16):
+        """ShapeDtypeStruct stand-ins for the phase's step function inputs."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+
+        def tok(bb, ss):
+            return jax.ShapeDtypeStruct((bb, ss), i32)
+
+        if shape.phase == "train":
+            if cfg.kind in ("encdec", "audio"):
+                dec = s // 4
+                return {
+                    "frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), act_dtype),
+                    "tokens": tok(b, dec),
+                    "labels": tok(b, dec),
+                }
+            if cfg.kind == "vlm":
+                p = min(1024, s // 4)
+                return {
+                    "tokens": tok(b, s - p),
+                    "patch_embeds": jax.ShapeDtypeStruct((b, p, cfg.d_model), act_dtype),
+                    "labels": tok(b, s - p),
+                }
+            return {"tokens": tok(b, s), "labels": tok(b, s)}
+
+        if shape.phase == "prefill":
+            if cfg.kind in ("encdec", "audio"):
+                return {
+                    "frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), act_dtype),
+                    "tokens": tok(b, 1),
+                }
+            if cfg.kind == "vlm":
+                p = min(1024, s // 4)
+                return {
+                    "tokens": tok(b, s - p),
+                    "patch_embeds": jax.ShapeDtypeStruct((b, p, cfg.d_model), act_dtype),
+                }
+            return {"tokens": tok(b, s)}
+
+        # decode: one token against a seq_len-deep cache
+        enc_seq = s // 4 if cfg.kind in ("encdec", "audio") else 0
+        return {
+            "tokens": jax.ShapeDtypeStruct((b,), i32),
+            "cache": self.init_cache(
+                b, s, enc_seq=enc_seq, dtype=act_dtype, abstract=True
+            ),
+        }

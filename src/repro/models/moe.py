@@ -1,0 +1,138 @@
+"""Mixture-of-Experts layer: shared experts + routed top-k experts.
+
+Dispatch is capacity-based (scatter into an (E, C, d) buffer, batched
+expert matmuls, gather-combine) — the standard XLA/TPU-friendly form:
+the expert matmul is a single `ecd,edf->ecf` einsum whose E axis shards
+over the "model" mesh axis (expert parallelism); XLA inserts the
+all-to-alls at the dispatch/combine boundaries. Over-capacity tokens are
+dropped (they fall back to the shared experts / residual path), matching
+standard practice.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import init_mlp, mlp_apply, normal
+
+CAPACITY_FACTOR = 1.25
+
+
+def init_moe(rng, cfg: ModelConfig, dtype):
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(rng, 5)
+    p = {
+        "router": normal(ks[0], (d, m.num_experts), dtype=dtype),
+        "experts": {
+            "gate": normal(ks[1], (m.num_experts, d, m.d_expert), dtype=dtype),
+            "up": normal(ks[2], (m.num_experts, d, m.d_expert), dtype=dtype),
+            "down": normal(ks[3], (m.num_experts, m.d_expert, d), dtype=dtype),
+        },
+    }
+    if m.num_shared_experts:
+        p["shared"] = init_mlp(
+            ks[4], d, m.num_shared_experts * m.d_expert, gated=True, dtype=dtype
+        )
+    return p
+
+
+def moe_apply_chunked(p, x, cfg: ModelConfig, valid=None, seq_chunk: int = 2048):
+    """MoE scanned over sequence chunks (hillclimb #3, EXPERIMENTS.md §Perf).
+
+    The routing one-hot/cumsum tensors and the (E, C, d) dispatch buffer
+    scale with the token count; chunking bounds them to one chunk's worth
+    (peak activation memory / n_chunks) while the expert weights are
+    re-read once per chunk (they are small next to the buffers at long
+    prefill). Capacity becomes per-chunk, which is *more* faithful to how
+    serving systems bound skew. Baseline (paper-faithful global capacity)
+    is moe_apply.
+    """
+    b, slen, d = x.shape
+    chunk = min(seq_chunk, slen)
+    while slen % chunk:
+        chunk //= 2
+    n = slen // chunk
+    if n <= 1:
+        return moe_apply(p, x, cfg, valid=valid)
+    xs = jnp.moveaxis(x.reshape(b, n, chunk, d), 1, 0)
+    vs = (jnp.moveaxis(valid.reshape(b, n, chunk), 1, 0)
+          if valid is not None else None)
+
+    def body(_, inp):
+        if vs is None:
+            xc = inp
+            y, aux = moe_apply(p, xc, cfg)
+        else:
+            xc, vc = inp
+            y, aux = moe_apply(p, xc, cfg, valid=vc)
+        return None, (y, aux)
+
+    _, (ys, auxs) = jax.lax.scan(body, None, xs if vs is None else (xs, vs))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, slen, d)
+    return y, jnp.mean(auxs)
+
+
+def moe_apply(p, x: jax.Array, cfg: ModelConfig, valid=None) -> Tuple[jax.Array, jax.Array]:
+    """x (B, S, d) -> (y (B, S, d), aux_loss scalar).
+
+    valid: optional (B, S) bool — padding tokens are excluded from routing so
+    they neither consume expert capacity nor contribute to the aux loss.
+    (Like any capacity-based MoE, outputs are weakly batch-dependent: which
+    tokens drop depends on what else is in the batch.)
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+
+    logits = (xt @ p["router"]).astype(jnp.float32)       # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, m.top_k)          # (T, k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+    if valid is not None:
+        vt = valid.reshape(t)
+        top_w = top_w * vt[:, None]
+        top_e = jnp.where(vt[:, None], top_e, m.num_experts)  # off-range -> no expert
+        probs = probs * vt[:, None]
+
+    # ---- load-balance auxiliary loss (Switch-style) ----------------------
+    me = jnp.mean(probs, axis=0)                                   # (E,)
+    onehot_top = jax.nn.one_hot(top_e, m.num_experts)              # (T,k,E)
+    ce = jnp.mean(jnp.sum(onehot_top, axis=1), axis=0) / m.top_k   # (E,)
+    aux = m.num_experts * jnp.sum(me * ce) * m.router_aux_loss_coef
+
+    # ---- capacity-based dispatch ------------------------------------------
+    cap = int(CAPACITY_FACTOR * t * m.top_k / m.num_experts) + 1
+    cap = min(cap, t)
+    flat_e = top_e.reshape(t * m.top_k)                            # slot -> expert
+    flat_w = top_w.reshape(t * m.top_k)
+    flat_oh = onehot_top.reshape(t * m.top_k, m.num_experts)
+    # position of each slot within its expert's queue
+    pos_in_e = (jnp.cumsum(flat_oh, axis=0) - 1.0)                 # (T*k, E)
+    slot_pos = jnp.sum(pos_in_e * flat_oh, axis=-1).astype(jnp.int32)
+    keep = slot_pos < cap
+    slot_pos = jnp.where(keep, slot_pos, cap)  # dropped -> scatter to waste row
+
+    token_idx = jnp.repeat(jnp.arange(t), m.top_k)
+    buf = jnp.zeros((m.num_experts, cap + 1, d), x.dtype)
+    buf = buf.at[flat_e, slot_pos].add(xt[token_idx])
+    buf = buf[:, :cap]                                             # (E, C, d)
+
+    # ---- expert FFN (batched over experts; E shards over "model") --------
+    h = jax.nn.silu(
+        jnp.einsum("ecd,edf->ecf", buf, p["experts"]["gate"])
+    ) * jnp.einsum("ecd,edf->ecf", buf, p["experts"]["up"])
+    out = jnp.einsum("ecf,efd->ecd", h, p["experts"]["down"])      # (E, C, d)
+
+    # ---- combine ----------------------------------------------------------
+    gathered = out[flat_e, jnp.minimum(slot_pos, cap - 1)]         # (T*k, d)
+    gathered = gathered * (flat_w * keep)[:, None]
+    y = jnp.zeros((t, d), x.dtype).at[token_idx].add(gathered)
+
+    if "shared" in p:
+        y = y + mlp_apply(p["shared"], xt)
+    return y.reshape(b, s, d), aux

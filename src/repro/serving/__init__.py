@@ -1,0 +1,9 @@
+from repro.serving.engine import ServingEngine
+from repro.serving.kv_manager import KVSlotManager
+from repro.serving.request import Request, ReqState
+from repro.serving.simulator import ServingSimulator, SimConfig, SimResult
+
+__all__ = [
+    "Request", "ReqState", "KVSlotManager", "ServingEngine",
+    "ServingSimulator", "SimConfig", "SimResult",
+]

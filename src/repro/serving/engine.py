@@ -1,0 +1,238 @@
+"""Real continuous-batching engine: runs an actual JAX model on device.
+
+This is the integration target for the Andes scheduler — the same
+Scheduler/FluidQoE/Request machinery as the simulator, but every decode
+iteration executes the model's jitted ``decode_step`` against a static-slot
+KV cache, prefills run the real prompt, preemption really moves cache
+slices to host numpy (swap) or re-prefills (recompute), and tokens are
+greedily sampled.
+
+The clock is virtual by default (advanced by the LatencyModel per step) so
+QoE specs in seconds are meaningful on a CPU container and tests are
+deterministic; ``clock="wall"`` uses wall time on real hardware.
+
+The engine also serves as the oracle for validating the simulator
+(tests/test_sim_vs_engine.py): same scheduler, same workload, same latency
+model ⇒ near-identical scheduling traces.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.latency_model import LatencyModel
+from repro.core.qoe import FluidQoE
+from repro.core.scheduler import Scheduler
+from repro.models.model import Model
+from repro.serving.kv_manager import KVSlotManager
+from repro.serving.request import Request, ReqState
+
+
+def _slot_axis(leaf_ndim: int) -> int:
+    return 0 if leaf_ndim == 1 else 1   # length (B,) vs (L, B, ...)
+
+
+@functools.partial(jax.jit, static_argnames=("slot",))
+def _write_slot(cache, src, slot):
+    """Insert batch-1 `src` pytree into `cache` at batch slot `slot`."""
+    def ins(c, s):
+        ax = _slot_axis(c.ndim)
+        idx = [slice(None)] * c.ndim
+        idx[ax] = slot
+        return c.at[tuple(idx)].set(jnp.squeeze(s, ax).astype(c.dtype))
+    return jax.tree.map(ins, cache, src)
+
+
+@functools.partial(jax.jit, static_argnames=("slot",))
+def _read_slot(cache, slot):
+    def rd(c):
+        ax = _slot_axis(c.ndim)
+        return jax.lax.index_in_dim(c, slot, ax, keepdims=True)
+    return jax.tree.map(rd, cache)
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        model: Model,
+        params,
+        scheduler: Scheduler,
+        lat: LatencyModel,
+        *,
+        num_slots: int = 8,
+        max_seq: int = 256,
+        capacity_tokens: Optional[int] = None,
+        preemption_mode: str = "swap",
+        clock: str = "virtual",
+        eos_id: int = -1,
+        cache_dtype=jnp.float32,
+    ):
+        self.model = model
+        self.params = params
+        self.sched = scheduler
+        self.lat = lat
+        self.kv = KVSlotManager(num_slots, max_seq, capacity_tokens)
+        self.preemption_mode = preemption_mode
+        self.clock = clock
+        self.eos_id = eos_id
+        self.max_seq = max_seq
+
+        enc_seq = max_seq // 4 if model.cfg.kind in ("encdec", "audio") else 0
+        self.cache = model.init_cache(
+            num_slots, max_seq, enc_seq=enc_seq, dtype=cache_dtype
+        )
+        self._decode = jax.jit(model.decode_step)
+        self.fluid = FluidQoE()
+        self.now = 0.0
+        self.slot_req: Dict[int, Request] = {}
+        self.preemptions = 0
+        self.total_tokens = 0
+        self.iterations = 0
+        self._wall0 = time.monotonic()
+
+    # ---------------------------------------------------------------- clock
+    def _tick(self, seconds: float) -> None:
+        if self.clock == "virtual":
+            self.now += seconds
+        else:
+            self.now = time.monotonic() - self._wall0
+
+    # -------------------------------------------------------------- prefill
+    def _prefill_request(self, r: Request) -> None:
+        """Run the prompt (plus any generated prefix on recompute)."""
+        toks = np.concatenate([
+            np.asarray(r.prompt_tokens, np.int32),
+            np.asarray(r.output_tokens[: r.generated], np.int32),
+        ])
+        enc_seq = self.max_seq // 4 if self.model.cfg.kind in ("encdec", "audio") else 0
+        kv_dtype = self.cache["k"].dtype if "k" in self.cache \
+            else self.cache["ssm_conv"].dtype
+        one = self.model.init_cache(
+            1, self.max_seq, enc_seq=enc_seq, dtype=kv_dtype
+        )
+        batch = {"tokens": jnp.asarray(toks)[None]}
+        if self.model.cfg.kind in ("encdec", "audio"):
+            frames = getattr(r, "frames", None)
+            batch["frames"] = (jnp.asarray(frames)[None] if frames is not None
+                               else jnp.zeros((1, enc_seq, self.model.cfg.d_model),
+                                              jnp.float32))
+        logits, one = self.model.prefill(self.params, batch, one)
+        slot = self.kv.allocate(r)
+        self.cache = _write_slot(self.cache, one, slot)
+        self.slot_req[slot] = r
+        self._tick(self.lat.prefill_latency(len(toks)))
+        if r.generated == 0:
+            tok = int(jnp.argmax(logits[0]))
+            self._emit(r, tok)
+
+    # ---------------------------------------------------------------- emit
+    def _emit(self, r: Request, tok: int) -> None:
+        r.output_tokens.append(tok)
+        r.generated += 1
+        r.emit_times.append(self.now)
+        self.fluid.emit(r.fluid_idx, self.now, 1)
+        self.kv.grow(r)
+        self.total_tokens += 1
+        done = (r.generated >= r.output_len
+                or (self.eos_id >= 0 and tok == self.eos_id))
+        if done:
+            r.state = ReqState.FINISHED
+            r.finish_time = self.now
+            self.sched.on_request_finish(r)
+            slot = r.engine_slot
+            self.kv.release(r)
+            self.slot_req.pop(slot, None)
+
+    # ------------------------------------------------------------ preempt
+    def _preempt(self, r: Request) -> None:
+        r.preemptions += 1
+        self.preemptions += 1
+        slot = r.engine_slot
+        if self.preemption_mode == "swap":
+            host_slice = jax.device_get(_read_slot(self.cache, slot))
+            self.kv.swap_out(r, host_slice)
+            r.state = ReqState.SWAPPED
+            self._tick(self.lat.swap_latency(r.context_len))
+        else:
+            self.kv.drop(r)
+            r.state = ReqState.WAITING
+            r.prefilled = False
+        self.slot_req.pop(slot, None)
+        self.sched.record_preemptions(1)
+
+    def _swap_in(self, r: Request) -> None:
+        host_slice = self.kv.swap_in(r)
+        slot = self.kv.allocate(r)
+        self.cache = _write_slot(
+            self.cache, jax.tree.map(jnp.asarray, host_slice), slot
+        )
+        self.slot_req[slot] = r
+        r.state = ReqState.RUNNING
+        self._tick(self.lat.swap_latency(r.context_len))
+
+    # ----------------------------------------------------------- main loop
+    def run(self, workload: List[Request], max_iterations: int = 100_000):
+        """Serve the workload to completion. Returns the finished requests."""
+        pending = sorted(workload, key=lambda r: r.arrival)
+        live: List[Request] = []
+
+        def admit_arrivals():
+            while pending and pending[0].arrival <= self.now:
+                r = pending.pop(0)
+                r.fluid_idx = self.fluid.add(r.arrival, r.spec)
+                r.state = ReqState.WAITING
+                live.append(r)
+                self.sched.on_request_arrival(r)
+
+        while (pending or live) and self.iterations < max_iterations:
+            if not live and pending:
+                self.now = max(self.now, pending[0].arrival)
+            admit_arrivals()
+            if not live:
+                continue
+
+            target = self.sched.schedule(self.now, live, self.fluid)
+            target_ids = {id(r) for r in target}
+
+            for r in list(self.slot_req.values()):
+                if id(r) not in target_ids and r.state == ReqState.RUNNING:
+                    self._preempt(r)
+            for r in target:
+                if r.state == ReqState.SWAPPED and self.kv.can_allocate(r):
+                    self._swap_in(r)
+                elif r.state == ReqState.WAITING and self.kv.can_allocate(r):
+                    r.state = ReqState.RUNNING
+                    r.prefilled = True
+                    self._prefill_request(r)
+
+            # ---- one decode iteration over all occupied slots -------------
+            active = {s: r for s, r in self.slot_req.items()
+                      if r.state == ReqState.RUNNING}
+            if active:
+                lengths = np.zeros(self.kv.num_slots, np.int32)
+                tokens = np.zeros(self.kv.num_slots, np.int32)
+                for s, r in active.items():
+                    lengths[s] = r.context_len
+                    tokens[s] = r.output_tokens[-1] if r.output_tokens else 0
+                self.cache["length"] = jnp.asarray(lengths)
+                logits, self.cache = self._decode(
+                    self.params, jnp.asarray(tokens), self.cache
+                )
+                total_ctx = int(lengths.sum())
+                self._tick(self.lat.iter_latency(len(active), total_ctx))
+                nxt = np.asarray(jnp.argmax(logits, axis=-1))
+                for s, r in list(active.items()):
+                    self._emit(r, int(nxt[s]))
+            else:
+                self._tick(self.lat.hw.overhead)
+
+            self.iterations += 1
+            live = [r for r in live if r.is_live]
+            admit_arrivals()
+
+        return workload

@@ -1,0 +1,74 @@
+"""KV slot manager: static-slot cache accounting + swap/recompute store.
+
+The TPU adaptation of vLLM's paged KV (DESIGN.md §3): the device cache is a
+fixed (L, B_slots, S_max, ...) pytree; this manager owns
+
+  * slot allocation (request -> batch slot),
+  * token-granular accounting (the scheduler's knapsack weights / capacity M),
+  * the request metadata store: swapped-out KV/state lives here as host
+    numpy arrays (paper Fig. 6 step 3) until swap-in or recompute.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.serving.request import Request
+
+
+class KVSlotManager:
+    def __init__(self, num_slots: int, max_seq: int,
+                 capacity_tokens: Optional[int] = None):
+        self.num_slots = num_slots
+        self.max_seq = max_seq
+        self.capacity_tokens = capacity_tokens or num_slots * max_seq
+        self.free_slots: List[int] = list(range(num_slots))
+        self.slot_of: Dict[int, int] = {}          # rid -> slot
+        self.tokens_used = 0
+        self.host_store: Dict[int, dict] = {}      # rid -> host pytree slice
+        self.swap_bytes_total = 0
+
+    # ---- allocation ---------------------------------------------------------
+    def can_allocate(self, req: Request) -> bool:
+        return (bool(self.free_slots)
+                and self.tokens_used + req.context_len <= self.capacity_tokens)
+
+    def allocate(self, req: Request) -> int:
+        slot = self.free_slots.pop()
+        self.slot_of[req.rid] = slot
+        self.tokens_used += req.context_len
+        req.engine_slot = slot
+        return slot
+
+    def grow(self, req: Request, n: int = 1) -> None:
+        """Account for n freshly generated tokens."""
+        self.tokens_used += n
+
+    def release(self, req: Request) -> None:
+        slot = self.slot_of.pop(req.rid)
+        self.free_slots.append(slot)
+        self.tokens_used -= req.context_len
+        req.engine_slot = -1
+
+    # ---- preemption ---------------------------------------------------------
+    def swap_out(self, req: Request, host_slice: dict) -> None:
+        """Park a device slice (already fetched to host) and free the slot."""
+        self.host_store[req.rid] = host_slice
+        self.swap_bytes_total += sum(
+            np.asarray(v).nbytes for v in jax.tree.leaves(host_slice)
+        )
+        self.release(req)
+
+    def swap_in(self, req: Request) -> dict:
+        return self.host_store.pop(req.rid)
+
+    def drop(self, req: Request) -> None:
+        """Recompute-style preemption: nothing parked, slot freed."""
+        self.host_store.pop(req.rid, None)
+        self.release(req)
+
+    @property
+    def utilization(self) -> float:
+        return self.tokens_used / self.capacity_tokens

@@ -1,0 +1,5 @@
+"""Re-export: Request lifecycle lives in repro.core.request (the scheduler
+is part of the paper's core and owns the request model)."""
+from repro.core.request import Request, ReqState
+
+__all__ = ["Request", "ReqState"]

@@ -1,0 +1,201 @@
+"""Discrete-event simulator for paper-scale serving experiments.
+
+Faithful continuous-batching semantics (vLLM-style, iteration-granular):
+every iteration the scheduler picks the running set; newly admitted
+requests pay prefill (which emits their first token, blocking decode like
+vLLM's non-chunked prefill); preempted requests pay swap-out now and
+swap-in (or full recompute) on readmission; then every running request
+decodes one token whose latency comes from the roofline-derived
+LatencyModel. The client-side token buffer and exact Eq. 1 QoE are applied
+at reporting time.
+
+This is where Figures 3/10–18/21 and Table 4 are reproduced (the container
+is CPU-only; see DESIGN.md §7 — the real engine in engine.py runs the same
+scheduler against real models on small configs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.latency_model import LatencyModel
+from repro.core.qoe import FluidQoE
+from repro.core.scheduler import Scheduler
+from repro.serving.request import Request, ReqState
+
+
+@dataclasses.dataclass
+class SimConfig:
+    kv_capacity_tokens: int            # M
+    preemption_mode: str = "swap"      # "swap" | "recompute"
+    host_kv_capacity_tokens: int = 10_000_000
+    max_sim_time: float = 10_000.0
+    # charge the *measured host wall time* of each scheduler.schedule() call
+    # to the simulated clock — this is what exposes the DP solver's
+    # O(M·N·B) cost end-to-end (paper §6.5 Fig. 18)
+    charge_scheduler_overhead: bool = False
+
+
+@dataclasses.dataclass
+class SimResult:
+    requests: List[Request]
+    makespan: float
+    total_tokens: int
+    preemptions: int
+    iterations: int
+    batch_sizes: List[int]
+
+    # ---- paper metrics -----------------------------------------------------
+    def qoes(self) -> np.ndarray:
+        return np.array([r.final_qoe() for r in self.requests])
+
+    def avg_qoe(self) -> float:
+        return float(np.mean(self.qoes())) if self.requests else 1.0
+
+    def ttfts(self) -> np.ndarray:
+        return np.array([r.final_ttft() for r in self.requests])
+
+    def tds(self) -> np.ndarray:
+        return np.array([r.final_tds() for r in self.requests])
+
+    def throughput(self) -> float:
+        return self.total_tokens / self.makespan if self.makespan > 0 else 0.0
+
+    def preemption_freq(self) -> float:
+        return self.preemptions / max(len(self.requests), 1)
+
+    def normalized_latencies(self) -> np.ndarray:
+        return np.array([r.normalized_latency() for r in self.requests])
+
+
+class ServingSimulator:
+    def __init__(
+        self,
+        scheduler: Scheduler,
+        lat: LatencyModel,
+        sim_cfg: SimConfig,
+    ):
+        self.sched = scheduler
+        self.lat = lat
+        self.cfg = sim_cfg
+
+    def run(self, workload: List[Request]) -> SimResult:
+        workload = sorted(workload, key=lambda r: r.arrival)
+        fluid = FluidQoE()
+        pending = list(workload)
+        live: List[Request] = []
+        now = 0.0
+        total_tokens = 0
+        preemptions = 0
+        iterations = 0
+        batch_sizes: List[int] = []
+        host_kv_used = 0
+        st_equiv = self.sched.cfg.state_equiv_tokens
+
+        def admit_arrivals(t):
+            nonlocal pending
+            while pending and pending[0].arrival <= t:
+                r = pending.pop(0)
+                r.fluid_idx = fluid.add(r.arrival, r.spec)
+                r.state = ReqState.WAITING
+                live.append(r)
+                self.sched.on_request_arrival(r)
+
+        while pending or live:
+            if not live:
+                now = max(now, pending[0].arrival)
+            admit_arrivals(now)
+            if not live:
+                continue
+            if now > self.cfg.max_sim_time:
+                break
+
+            running = [r for r in live if r.state == ReqState.RUNNING]
+            if self.cfg.charge_scheduler_overhead:
+                import time as _time
+                _t0 = _time.perf_counter()
+                target = self.sched.schedule(now, live, fluid)
+                now += _time.perf_counter() - _t0
+            else:
+                target = self.sched.schedule(now, live, fluid)
+            target_set = set(id(r) for r in target)
+
+            # ---- preemptions ------------------------------------------------
+            iter_extra = 0.0
+            newly_preempted = [r for r in running if id(r) not in target_set]
+            for r in newly_preempted:
+                r.preemptions += 1
+                preemptions += 1
+                ctx = r.context_len
+                if (self.cfg.preemption_mode == "swap"
+                        and host_kv_used + ctx <= self.cfg.host_kv_capacity_tokens):
+                    r.state = ReqState.SWAPPED
+                    host_kv_used += ctx
+                    iter_extra += self.lat.swap_latency(ctx)
+                else:
+                    # paper §4.2: fall back to recomputation when host RAM full
+                    r.state = ReqState.WAITING
+                    r.prefilled = False
+            self.sched.record_preemptions(len(newly_preempted))
+
+            # ---- admissions -------------------------------------------------
+            first_emits: List[Request] = []
+            for r in target:
+                if r.state == ReqState.SWAPPED:
+                    host_kv_used -= r.context_len
+                    iter_extra += self.lat.swap_latency(r.context_len)
+                    r.state = ReqState.RUNNING
+                elif r.state == ReqState.WAITING:
+                    # prefill (recompute includes generated prefix)
+                    iter_extra += self.lat.prefill_latency(r.context_len)
+                    r.state = ReqState.RUNNING
+                    r.prefilled = True
+                    if r.generated == 0:
+                        first_emits.append(r)
+
+            running = [r for r in live if r.state == ReqState.RUNNING]
+            batch_sizes.append(len(running))
+
+            # first tokens come out of prefill itself
+            prefill_done = now + iter_extra
+            for r in first_emits:
+                r.emit_times.append(prefill_done)
+                fluid.emit(r.fluid_idx, prefill_done, 1)
+                r.generated = 1
+                total_tokens += 1
+
+            # ---- decode iteration -------------------------------------------
+            decoders = [r for r in running if r.generated < r.output_len]
+            total_ctx = sum(r.context_len for r in decoders)
+            step = self.lat.iter_latency(len(decoders), total_ctx)
+            now = prefill_done + (step if decoders else 0.0)
+            iterations += 1
+
+            emit_idx = []
+            for r in decoders:
+                r.emit_times.append(now)
+                r.generated += 1
+                total_tokens += 1
+                emit_idx.append(r.fluid_idx)
+            if emit_idx:
+                fluid.emit(np.array(emit_idx), now, 1)
+
+            # ---- completions -------------------------------------------------
+            for r in running:
+                if r.generated >= r.output_len:
+                    r.state = ReqState.FINISHED
+                    r.finish_time = now
+                    self.sched.on_request_finish(r)
+            live = [r for r in live if r.is_live]
+            admit_arrivals(now)
+
+        return SimResult(
+            requests=workload,
+            makespan=now,
+            total_tokens=total_tokens,
+            preemptions=preemptions,
+            iterations=iterations,
+            batch_sizes=batch_sizes,
+        )

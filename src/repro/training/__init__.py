@@ -1,0 +1,17 @@
+from repro.training.checkpoint import restore_checkpoint, save_checkpoint
+from repro.training.data import SyntheticCorpus, packed_batches
+from repro.training.optimizer import (
+    OptimizerConfig,
+    OptState,
+    adamw_update,
+    init_opt_state,
+    lr_schedule,
+)
+from repro.training.train import build_train_step, init_train_state
+
+__all__ = [
+    "OptimizerConfig", "OptState", "adamw_update", "init_opt_state",
+    "lr_schedule", "build_train_step", "init_train_state",
+    "SyntheticCorpus", "packed_batches",
+    "save_checkpoint", "restore_checkpoint",
+]

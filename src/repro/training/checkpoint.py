@@ -1,0 +1,54 @@
+"""Checkpointing: flatten pytrees to npz with path-encoded keys."""
+from __future__ import annotations
+
+import os
+from typing import Tuple
+
+import jax
+import numpy as np
+
+SEP = "|"
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, params, opt_state=None, step: int = 0) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    payload = {f"params{SEP}{k}": v for k, v in _flatten(params).items()}
+    if opt_state is not None:
+        payload.update(
+            {f"opt{SEP}{k}": v for k, v in _flatten(opt_state).items()}
+        )
+    payload["__step__"] = np.asarray(step)
+    np.savez(path, **payload)
+
+
+def restore_checkpoint(path: str, params_template, opt_template=None):
+    """Restores into the given pytree templates (shape/dtype preserved)."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    step = int(data["__step__"])
+
+    def rebuild(template, prefix):
+        flat_t = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        for pth, leaf in flat_t[0]:
+            key = prefix + SEP + SEP.join(
+                str(getattr(p, "key", getattr(p, "idx", p))) for p in pth
+            )
+            arr = data[key]
+            assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+            leaves.append(arr.astype(leaf.dtype))
+        return jax.tree_util.tree_unflatten(flat_t[1], leaves)
+
+    params = rebuild(params_template, "params")
+    if opt_template is None:
+        return params, step
+    return params, rebuild(opt_template, "opt"), step

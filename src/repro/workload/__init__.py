@@ -1,0 +1,12 @@
+from repro.workload.arrivals import gamma_arrivals, poisson_arrivals
+from repro.workload.qoe_traces import reading_qoe_trace, voice_qoe_trace
+from repro.workload.sharegpt import make_workload, sample_lengths
+
+__all__ = [
+    "poisson_arrivals",
+    "gamma_arrivals",
+    "reading_qoe_trace",
+    "voice_qoe_trace",
+    "sample_lengths",
+    "make_workload",
+]

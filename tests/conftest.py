@@ -1,0 +1,9 @@
+import os
+
+# Tests must see the single real CPU device (the dry-run fakes 512 devices
+# in its own process only). Keep XLA quiet and single-threaded-friendly.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,166 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles.
+
+Every kernel runs in interpret mode on CPU (the kernel body executes in
+Python) and must match its ref.py oracle to tolerance.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.selective_scan import selective_scan
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32).astype(dtype)
+
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+# ---------------------------------------------------------------------------
+# flash attention (prefill)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,h,kv,hd", [
+    (1, 128, 4, 4, 64),      # MHA
+    (2, 256, 8, 2, 64),      # GQA
+    (1, 200, 4, 1, 32),      # MQA + ragged seq (padding path)
+    (2, 64, 2, 2, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(b, s, h, kv, hd, dtype, causal):
+    q = rand(0, (b, s, h, hd), dtype)
+    k = rand(1, (b, s, kv, hd), dtype)
+    v = rand(2, (b, s, kv, hd), dtype)
+    out = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64,
+                          interpret=True)
+    expect = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype],
+    )
+
+
+def test_flash_attention_sliding_window():
+    q = rand(0, (2, 256, 4, 64), jnp.float32)
+    k = rand(1, (2, 256, 2, 64), jnp.float32)
+    v = rand(2, (2, 256, 2, 64), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, window=50, block_q=64,
+                          block_k=64, interpret=True)
+    expect = ref.attention_ref(q, k, v, causal=True, window=50)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,h,kv,hd", [
+    (1, 128, 4, 4, 64),
+    (3, 300, 8, 2, 64),      # ragged + padding
+    (2, 512, 16, 1, 32),     # MQA deep cache
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(b, s, h, kv, hd, dtype):
+    q = rand(0, (b, h, hd), dtype)
+    k = rand(1, (b, s, kv, hd), dtype)
+    v = rand(2, (b, s, kv, hd), dtype)
+    lengths = jnp.asarray(
+        np.random.default_rng(0).integers(1, s + 1, b), jnp.int32
+    )
+    out = decode_attention(q, k, v, lengths, block_k=64, interpret=True)
+    expect = ref.decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype],
+    )
+
+
+def test_decode_attention_window():
+    b, s, h, kv, hd = 2, 256, 8, 4, 64
+    q = rand(0, (b, h, hd), jnp.float32)
+    k = rand(1, (b, s, kv, hd), jnp.float32)
+    v = rand(2, (b, s, kv, hd), jnp.float32)
+    lengths = jnp.array([256, 100], jnp.int32)
+    out = decode_attention(q, k, v, lengths, window=32, block_k=64,
+                           interpret=True)
+    expect = ref.decode_attention_ref(q, k, v, lengths, window=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# selective scan (Mamba-1)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,d,n", [
+    (1, 128, 64, 16),
+    (2, 256, 128, 16),
+    (1, 64, 256, 8),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_selective_scan_sweep(b, s, d, n, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = jax.random.normal(ks[0], (b, s, d), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, d)) - 1).astype(dtype)
+    A = -jnp.exp(jax.random.normal(ks[2], (d, n)) * 0.5)
+    B = jax.random.normal(ks[3], (b, s, n), dtype)
+    C = jax.random.normal(ks[4], (b, s, n), dtype)
+    D = jnp.ones((d,)) * 0.3
+    out = selective_scan(x, dt, A, B, C, D, chunk=64, block_d=64, interpret=True)
+    expect = ref.selective_scan_ref(x, dt, A, B, C, D)
+    scale = float(jnp.max(jnp.abs(expect))) + 1e-6
+    assert float(jnp.max(jnp.abs(out - expect))) / scale < 1e-5
+
+
+def test_chunked_scan_matches_sequential():
+    """XLA chunked associative form == sequential oracle."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    b, s, d, n = 2, 192, 64, 16
+    x = jax.random.normal(ks[0], (b, s, d))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, d)) - 1)
+    A = -jnp.exp(jax.random.normal(ks[2], (d, n)) * 0.5)
+    B = jax.random.normal(ks[3], (b, s, n))
+    C = jax.random.normal(ks[4], (b, s, n))
+    D = jnp.ones((d,)) * 0.3
+    out = ops.selective_scan(x, dt, A, B, C, D, impl="chunked", chunk=64)
+    expect = ref.selective_scan_ref(x, dt, A, B, C, D)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_chunked_matches_sequential():
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    b, s, nh, hd, n = 2, 128, 4, 32, 16
+    x = jax.random.normal(ks[0], (b, s, nh, hd))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, nh)) - 1)
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,)) * 0.5)
+    B = jax.random.normal(ks[3], (b, s, n))
+    C = jax.random.normal(ks[4], (b, s, n))
+    D = jnp.ones((nh,)) * 0.3
+    out = ops.ssd(x, dt, A, B, C, D, impl="chunked", chunk=32)
+    expect = ref.ssd_ref(x, dt, A, B, C, D)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=2e-4, rtol=2e-3)
+
+
+def test_scan_step_consistency():
+    """Sequential decode steps == full-sequence scan."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    b, s, d, n = 1, 32, 16, 8
+    x = jax.random.normal(ks[0], (b, s, d))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, d)) - 1)
+    A = -jnp.exp(jax.random.normal(ks[2], (d, n)) * 0.5)
+    B = jax.random.normal(ks[3], (b, s, n))
+    C = jax.random.normal(ks[4], (b, s, n))
+    D = jnp.ones((d,)) * 0.3
+    full = ref.selective_scan_ref(x, dt, A, B, C, D)
+    h = jnp.zeros((b, d, n))
+    for t in range(s):
+        h, y = ops.selective_scan_step(h, x[:, t], dt[:, t], A, B[:, t], C[:, t], D)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(full[:, t]),
+                                   atol=1e-5)

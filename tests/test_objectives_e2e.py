@@ -1,0 +1,54 @@
+"""Alternative objectives (Appendix A) drive the scheduler end-to-end."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import A100_4X, LatencyModel, SchedulerConfig, make_scheduler
+from repro.core.objectives import avg_qoe, max_min_qoe, perfect_count
+from repro.serving.simulator import ServingSimulator, SimConfig
+from repro.workload import make_workload
+
+
+def test_objective_functions_shapes():
+    qs = np.array([1.0, 0.5, 0.2])
+    qw = np.array([0.9, 0.1, 0.2])
+    qn = np.array([1.0, 0.6, 0.3])
+    assert avg_qoe(qs, qw, qn).shape == (3,)
+    np.testing.assert_allclose(avg_qoe(qs, qw, qn), qs - qw)
+    mm = max_min_qoe(qs, qw, qn)
+    # the floor request (lowest q_wait given Q_min anchor) earns the most
+    assert np.argmax(mm) == 1
+    # only the currently-perfect request earns the primary perfect-count
+    # gain (+ the epsilon avg-QoE tiebreak, see objectives.EPS_TIEBREAK)
+    pc = perfect_count(qs, qw, qn)
+    assert pc[0] == pytest.approx(1.0, abs=0.02)
+    assert pc[1] == pytest.approx(0.0, abs=0.02)
+    assert pc[2] == pytest.approx(0.0, abs=0.02)
+    assert pc[0] > pc[1] + 0.9
+
+
+@pytest.mark.parametrize("objective", ["max_min_qoe", "perfect_count"])
+def test_objectives_run_e2e(objective):
+    cfg = get_config("opt-66b")
+    lat = LatencyModel(cfg, A100_4X)
+    wl = make_workload(200, 4.5, seed=3)
+    sched = make_scheduler("andes", 30_000, lat,
+                           SchedulerConfig(objective=objective))
+    res = ServingSimulator(sched, lat, SimConfig(kv_capacity_tokens=30_000)).run(wl)
+    assert all(r.generated >= r.output_len for r in res.requests)
+    assert res.avg_qoe() > 0.3
+
+
+def test_max_min_lifts_floor_vs_fcfs():
+    cfg = get_config("opt-66b")
+    lat = LatencyModel(cfg, A100_4X)
+
+    def floor(name, objective="avg_qoe"):
+        wl = make_workload(300, 5.0, seed=4)
+        sched = make_scheduler(name, 25_000, lat,
+                               SchedulerConfig(objective=objective))
+        res = ServingSimulator(sched, lat,
+                               SimConfig(kv_capacity_tokens=25_000)).run(wl)
+        return float(np.percentile(res.qoes(), 5))
+
+    assert floor("andes", "max_min_qoe") > floor("fcfs") + 0.05

@@ -1,0 +1,161 @@
+"""QoE metric (paper §3.1, Eq. 1): unit + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.qoe import (
+    FluidQoE,
+    QoESpec,
+    actual_area,
+    expected_area,
+    pace_delivery,
+    qoe_exact,
+)
+
+SPEC = QoESpec(ttft=1.0, tds=5.0)
+
+
+# ---------------------------------------------------------------------------
+# Token buffer pacing
+# ---------------------------------------------------------------------------
+
+def test_pacing_slows_burst():
+    # 10 tokens all at t=0 -> visible every 1/tds
+    d = pace_delivery(np.zeros(10), tds=5.0)
+    np.testing.assert_allclose(d, np.arange(10) / 5.0)
+
+
+def test_pacing_passthrough_when_slow():
+    e = np.arange(10) * 1.0   # 1 tok/s < tds
+    d = pace_delivery(e, tds=5.0)
+    np.testing.assert_allclose(d, e)
+
+
+@given(st.lists(st.floats(0, 100), min_size=1, max_size=50),
+       st.floats(0.5, 20))
+@settings(max_examples=100, deadline=None)
+def test_pacing_properties(emits, tds):
+    e = np.sort(np.array(emits))
+    d = pace_delivery(e, tds)
+    assert np.all(d >= e - 1e-12)                    # never before emission
+    assert np.all(np.diff(d) >= 1.0 / tds - 1e-9)    # never faster than tds
+    assert d[0] == e[0]                              # first token immediate
+
+
+# ---------------------------------------------------------------------------
+# Eq. 1 QoE
+# ---------------------------------------------------------------------------
+
+def test_perfect_delivery_gives_one():
+    # tokens arrive exactly on the expected TDT
+    l = 20
+    e = SPEC.ttft + np.arange(l) / SPEC.tds
+    assert qoe_exact(e, 0.0, SPEC, response_len=l) == pytest.approx(1.0)
+
+
+def test_early_delivery_still_one():
+    l = 20
+    e = 0.1 + np.arange(l) / 50.0    # much faster than needed
+    assert qoe_exact(e, 0.0, SPEC, response_len=l) == pytest.approx(1.0)
+
+
+def test_late_ttft_hurts():
+    l = 20
+    on_time = SPEC.ttft + np.arange(l) / SPEC.tds
+    late = 10.0 + np.arange(l) / SPEC.tds
+    q_on = qoe_exact(on_time, 0.0, SPEC, response_len=l)
+    q_late = qoe_exact(late, 0.0, SPEC, response_len=l)
+    assert q_late < q_on
+
+
+def test_slower_tds_hurts():
+    l = 30
+    good = SPEC.ttft + np.arange(l) / SPEC.tds
+    slow = SPEC.ttft + np.arange(l) / (SPEC.tds / 2)
+    assert qoe_exact(slow, 0.0, SPEC, response_len=l) < \
+        qoe_exact(good, 0.0, SPEC, response_len=l)
+
+
+def test_earlier_tokens_better_same_ttft_ttlt():
+    """Paper principle 3 / Fig. 2: front-loaded delivery beats back-loaded
+    even with identical TTFT and TTLT."""
+    ttft, ttlt, l = 1.0, 21.0, 40
+    front = np.concatenate([np.linspace(ttft, 8, 30), np.linspace(8.5, ttlt, 10)])
+    back = np.concatenate([np.linspace(ttft, 14, 10), np.linspace(14.5, ttlt, 30)])
+    q_front = qoe_exact(front, 0.0, SPEC, response_len=l)
+    q_back = qoe_exact(back, 0.0, SPEC, response_len=l)
+    assert q_front > q_back
+
+
+@given(
+    st.lists(st.floats(0.01, 60), min_size=2, max_size=60),
+    st.floats(0.2, 3.0),
+    st.floats(1.0, 10.0),
+)
+@settings(max_examples=100, deadline=None)
+def test_qoe_bounded(emits, ttft, tds):
+    e = np.sort(np.array(emits))
+    q = qoe_exact(e, 0.0, QoESpec(ttft, tds), response_len=len(e))
+    assert 0.0 <= q <= 1.0
+
+
+@given(st.floats(0.1, 30), st.floats(1, 10), st.floats(0.2, 3))
+@settings(max_examples=60, deadline=None)
+def test_expected_area_monotone(t, tds, ttft):
+    spec = QoESpec(ttft, tds)
+    a1 = expected_area(t, spec, cap=50)
+    a2 = expected_area(t + 1.0, spec, cap=50)
+    assert a2 >= a1
+
+
+# ---------------------------------------------------------------------------
+# Fluid model vs exact metric
+# ---------------------------------------------------------------------------
+
+def test_fluid_matches_exact_on_steady_stream():
+    spec = QoESpec(ttft=1.0, tds=5.0)
+    fl = FluidQoE()
+    i = fl.add(0.0, spec)
+    e = 0.5 + np.arange(100) / 5.0     # exactly on pace, early start
+    for t in e:
+        fl.emit(np.array([i]), float(t), 1)
+    q_fluid = fl.qoe_now(float(e[-1]))[i]
+    q_exact = qoe_exact(e, 0.0, spec)
+    assert abs(q_fluid - q_exact) < 0.08
+
+
+def test_fluid_predict_wait_decays_for_starved():
+    spec = QoESpec(ttft=1.0, tds=5.0)
+    fl = FluidQoE()
+    i = fl.add(0.0, spec)
+    fl.emit(np.array([i]), 1.0, 1)     # one token, then silence
+    q_soon = fl.predict_qoe(2.0, 5.0, 0.0, exp_len=np.array([100.0]))[i]
+    q_late = fl.predict_qoe(2.0, 50.0, 0.0, exp_len=np.array([100.0]))[i]
+    assert q_late < q_soon
+
+
+def test_fluid_predict_serve_beats_wait():
+    spec = QoESpec(ttft=1.0, tds=5.0)
+    fl = FluidQoE()
+    i = fl.add(0.0, spec)
+    q_wait = fl.predict_qoe(0.5, 20.0, 0.0, exp_len=np.array([100.0]))[i]
+    q_serve = fl.predict_qoe(0.5, 20.0, 8.0, exp_len=np.array([100.0]))[i]
+    assert q_serve > q_wait
+
+
+def test_fluid_sufficiently_served_high_q_wait():
+    """A request with a big client buffer should have high Q_wait (it is
+    safe to preempt) vs a starving one (urgent)."""
+    spec = QoESpec(ttft=1.0, tds=5.0)
+    fl = FluidQoE()
+    buffered = fl.add(0.0, spec)
+    starving = fl.add(0.0, spec)
+    # buffered got 80 tokens quickly; starving got 5 then nothing
+    for k, t in enumerate(0.2 + np.arange(80) / 40.0):
+        fl.emit(np.array([buffered]), float(t), 1)
+    for t in 0.2 + np.arange(5) / 40.0:
+        fl.emit(np.array([starving]), float(t), 1)
+    exp_len = np.array([100.0, 100.0])
+    q = fl.predict_qoe(3.0, 15.0, 0.0, exp_len=exp_len)
+    assert q[buffered] > q[starving]

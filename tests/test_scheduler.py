@@ -1,0 +1,174 @@
+"""Scheduler unit tests: Algorithm 1 greedy, Algorithm 2 DP, invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_config
+from repro.core import (
+    A100_4X,
+    LatencyModel,
+    QoESpec,
+    SchedulerConfig,
+    make_scheduler,
+)
+from repro.core.qoe import FluidQoE
+from repro.core.request import Request, ReqState
+from repro.core.scheduler import AndesDPScheduler, AndesScheduler
+
+CFG = get_config("opt-66b")
+LAT = LatencyModel(CFG, A100_4X)
+
+
+def mk_requests(n, rng, prompt_hi=500):
+    reqs = []
+    fluid = FluidQoE()
+    for i in range(n):
+        r = Request(
+            rid=i, arrival=float(i) * 0.1,
+            prompt_len=int(rng.integers(10, prompt_hi)),
+            output_len=int(rng.integers(10, 500)),
+            spec=QoESpec(ttft=1.0, tds=float(rng.uniform(3, 6))),
+        )
+        r.fluid_idx = fluid.add(r.arrival, r.spec)
+        reqs.append(r)
+    return reqs, fluid
+
+
+# ---------------------------------------------------------------------------
+# greedy packing (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+def test_greedy_respects_memory_and_batch():
+    sched = make_scheduler("andes", 1000, LAT)
+    gains = np.array([0.9, 0.8, 0.7, 0.6, 0.5])
+    weights = np.array([400, 400, 400, 100, 100])
+    sel, _ = sched._solve(gains, weights, b=3)
+    assert weights[sel].sum() <= 1000
+    assert sel.sum() <= 3
+
+
+def test_greedy_prefers_high_priority():
+    sched = make_scheduler("andes", 500, LAT)
+    gains = np.array([1.0, 1.0])
+    weights = np.array([500, 100])   # same gain, cheaper wins
+    sel, _ = sched._solve(gains, weights, b=1)
+    assert sel[1] and not sel[0]
+
+
+@given(st.integers(1, 40), st.integers(2, 12), st.integers(0, 10_000))
+@settings(max_examples=60, deadline=None)
+def test_greedy_never_violates_constraints(n, b, seed):
+    rng = np.random.default_rng(seed)
+    gains = rng.uniform(-0.5, 1.0, n)
+    weights = rng.integers(1, 800, n)
+    m = int(rng.integers(100, 3000))
+    sched = make_scheduler("andes", m, LAT)
+    sel, value = sched._solve(gains, weights, b)
+    assert weights[sel].sum() <= m
+    assert sel.sum() <= b
+    assert value == pytest.approx(gains[sel].sum())
+
+
+# ---------------------------------------------------------------------------
+# DP (Algorithm 2) vs greedy: DP optimal on small instances
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 10), st.integers(1, 6), st.integers(0, 5000))
+@settings(max_examples=40, deadline=None)
+def test_dp_at_least_as_good_as_greedy(n, b, seed):
+    """Algorithm 2 solves the *exact-B* knapsack (paper Eq. 4); the
+    scheduler enumerates candidate B values, so compare best-over-B'<=B
+    against the greedy's <=B packing."""
+    rng = np.random.default_rng(seed)
+    gains = rng.uniform(0.0, 1.0, n)
+    weights = rng.integers(1, 8, n) * 64    # granularity-aligned weights
+    m = 16 * 64
+    greedy = make_scheduler("andes", m, LAT)
+    dp = make_scheduler("andes_dp", m, LAT, granularity=64)
+    _, vg = greedy._solve(gains, weights, b)
+    vd = max(dp._solve(gains, weights, bb)[1] for bb in range(1, b + 1))
+    assert vd >= vg - 1e-9
+
+
+def test_dp_exact_small_case():
+    """Hand-checkable exact-k knapsack instance."""
+    dp = AndesDPScheduler(4 * 64, LAT, granularity=64)
+    gains = np.array([0.6, 0.5, 0.45, 0.2])
+    weights = np.array([3 * 64, 2 * 64, 2 * 64, 1 * 64])
+    sel, val = dp._solve(gains, weights, b=2)
+    # best 2 items under 4 units: items 1+2 (weights 2+2, gain 0.95)
+    assert val == pytest.approx(0.95)
+    assert list(np.nonzero(sel)[0]) == [1, 2]
+
+
+# ---------------------------------------------------------------------------
+# scheduling behaviour
+# ---------------------------------------------------------------------------
+
+def test_fcfs_admission_order():
+    rng = np.random.default_rng(0)
+    reqs, fluid = mk_requests(10, rng, prompt_hi=100)
+    sched = make_scheduler("fcfs", 350, LAT)
+    out = sched.schedule(1.0, reqs, fluid)
+    # admitted must be a prefix in arrival order (until memory bound)
+    rids = [r.rid for r in out]
+    assert rids == sorted(rids)
+    assert sum(r.kv_tokens() for r in out) <= 350
+
+
+def test_andes_admits_all_when_underloaded():
+    rng = np.random.default_rng(1)
+    reqs, fluid = mk_requests(5, rng, prompt_hi=50)
+    sched = make_scheduler("andes", 10_000, LAT)
+    out = sched.schedule(1.0, reqs, fluid)
+    assert len(out) == 5
+
+
+def test_andes_respects_memory_under_pressure():
+    rng = np.random.default_rng(2)
+    reqs, fluid = mk_requests(50, rng)
+    m = 2000
+    sched = make_scheduler("andes", m, LAT)
+    out = sched.schedule(5.0, reqs, fluid)
+    assert sum(r.kv_tokens() for r in out) <= m
+
+
+def test_andes_prioritizes_starving_over_buffered():
+    """The paper's core behaviour: a request that already has plenty of
+    buffered tokens is preempted in favour of a queued starving one."""
+    spec = QoESpec(ttft=1.0, tds=5.0)
+    fluid = FluidQoE()
+    buffered = Request(rid=0, arrival=0.0, prompt_len=400, output_len=300, spec=spec)
+    buffered.state = ReqState.RUNNING
+    buffered.generated = 150
+    buffered.fluid_idx = fluid.add(0.0, spec)
+    for t in 0.2 + np.arange(150) / 60.0:   # served at 60 tok/s: big buffer
+        fluid.emit(np.array([buffered.fluid_idx]), float(t), 1)
+
+    starving = Request(rid=1, arrival=0.1, prompt_len=400, output_len=300, spec=spec)
+    starving.fluid_idx = fluid.add(0.1, spec)
+
+    m = 600   # only one fits
+    sched = make_scheduler("andes", m, LAT)
+    sched.total_requests = 2
+    out = sched.schedule(3.0, [buffered, starving], fluid)
+    assert any(r.rid == 1 for r in out), "starving request must be scheduled"
+
+
+def test_preemption_cap_limits_churn():
+    rng = np.random.default_rng(3)
+    reqs, fluid = mk_requests(30, rng)
+    for r in reqs[:20]:
+        r.state = ReqState.RUNNING
+    sched = make_scheduler("andes", 4000, LAT,
+                           SchedulerConfig(preemption_cap=0.0))
+    sched.total_requests = 30
+    out = sched.schedule(5.0, reqs, fluid)
+    running_kept = sum(1 for r in reqs[:20] if r in out)
+    # cap 0: no running request may be preempted (unless memory forces it)
+    kept_tokens = sum(r.kv_tokens() for r in out)
+    assert kept_tokens <= 4000
+    preempted = 20 - running_kept
+    # allowed only if memory could not hold them
+    assert preempted == 0 or kept_tokens > 4000 - 600

@@ -1,0 +1,64 @@
+"""Simulator-vs-engine cross-validation.
+
+Same scheduler class, same latency model, same workload: the discrete-event
+simulator and the real engine (virtual clock) must agree on the scheduling-
+level outcomes. This is what lets the paper-scale simulator results stand
+in for runs this CPU container cannot execute (DESIGN.md §7).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import LatencyModel, QoESpec, SchedulerConfig, TPU_V5E, make_scheduler
+from repro.models import Model
+from repro.serving import Request, ServingEngine
+from repro.serving.simulator import ServingSimulator, SimConfig
+
+
+def mk_wl(cfg, rng, n=8, out_len=12):
+    wl = []
+    for i in range(n):
+        plen = int(rng.integers(8, 24))
+        wl.append(Request(
+            rid=i, arrival=i * 0.2, prompt_len=plen, output_len=out_len,
+            spec=QoESpec(ttft=1.0, tds=4.8),
+            prompt_tokens=rng.integers(0, cfg.vocab_size, plen),
+        ))
+    return wl
+
+
+def clone(wl):
+    return [Request(rid=r.rid, arrival=r.arrival, prompt_len=r.prompt_len,
+                    output_len=r.output_len, spec=r.spec,
+                    prompt_tokens=r.prompt_tokens) for r in wl]
+
+
+@pytest.mark.parametrize("sched_name", ["fcfs", "andes"])
+def test_sim_matches_engine_timings(sched_name):
+    cfg = get_smoke_config("llama3-8b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    lat = LatencyModel(cfg, TPU_V5E)
+    rng = np.random.default_rng(0)
+    wl = mk_wl(cfg, rng)
+
+    cap = 8 * 64
+    eng = ServingEngine(model, params,
+                        make_scheduler(sched_name, cap, lat, SchedulerConfig()),
+                        lat, num_slots=8, max_seq=64, capacity_tokens=cap)
+    out_e = eng.run(clone(wl), max_iterations=2000)
+
+    sim = ServingSimulator(
+        make_scheduler(sched_name, cap, lat, SchedulerConfig()),
+        lat, SimConfig(kv_capacity_tokens=cap),
+    )
+    out_s = sim.run(clone(wl)).requests
+
+    for re_, rs in zip(out_e, out_s):
+        assert re_.generated == rs.generated
+        # per-request TTFT agreement within 20% or 50 ms
+        te, ts = re_.final_ttft(), rs.final_ttft()
+        assert abs(te - ts) < max(0.05, 0.2 * ts), (re_.rid, te, ts)
+        qe, qs = re_.final_qoe(), rs.final_qoe()
+        assert abs(qe - qs) < 0.1, (re_.rid, qe, qs)

@@ -1,0 +1,111 @@
+"""Simulator behaviour + paper-claim validation at small scale."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (
+    A100_4X,
+    LatencyModel,
+    SchedulerConfig,
+    make_scheduler,
+)
+from repro.serving.simulator import ServingSimulator, SimConfig
+from repro.workload import make_workload
+
+CFG = get_config("opt-66b")
+LAT = LatencyModel(CFG, A100_4X)
+M = 65_000
+
+
+def run(sched_name, rate, n=250, seed=1, **simkw):
+    wl = make_workload(n, rate, seed=seed)
+    sched = make_scheduler(sched_name, M, LAT, SchedulerConfig())
+    sim = ServingSimulator(sched, LAT, SimConfig(kv_capacity_tokens=M, **simkw))
+    return sim.run(wl)
+
+
+def test_all_requests_complete():
+    res = run("fcfs", 2.0)
+    assert all(r.generated >= r.output_len for r in res.requests)
+    assert res.total_tokens == sum(r.output_len for r in res.requests)
+
+
+def test_underload_everyone_perfect():
+    res = run("fcfs", 0.5)
+    assert res.avg_qoe() > 0.98
+    res = run("andes", 0.5)
+    assert res.avg_qoe() > 0.98
+
+
+def test_emit_monotone_and_counts():
+    res = run("andes", 3.0)
+    for r in res.requests:
+        assert len(r.emit_times) == r.generated
+        assert all(b >= a for a, b in zip(r.emit_times, r.emit_times[1:]))
+
+
+def test_memory_never_exceeded():
+    wl = make_workload(150, 3.5, seed=2)
+    sched = make_scheduler("andes", 20_000, LAT, SchedulerConfig())
+    sim = ServingSimulator(sched, LAT, SimConfig(kv_capacity_tokens=20_000))
+
+    orig = sched.schedule
+    peaks = []
+
+    def wrapped(now, live, fluid):
+        out = orig(now, live, fluid)
+        peaks.append(sum(r.kv_tokens() for r in out))
+        return out
+
+    sched.schedule = wrapped
+    sim.run(wl)
+    assert max(peaks) <= 20_000
+
+
+# ---------------------------------------------------------------------------
+# paper claims (reduced scale; full scale in benchmarks/)
+# ---------------------------------------------------------------------------
+
+def run_tight(sched_name, rate=5.0, n=300, seed=1, m=25_000, **simkw):
+    """Overloaded regime: small KV capacity makes memory bind immediately
+    (the full-scale operating points live in benchmarks/)."""
+    wl = make_workload(n, rate, seed=seed)
+    sched = make_scheduler(sched_name, m, LAT, SchedulerConfig())
+    sim = ServingSimulator(sched, LAT, SimConfig(kv_capacity_tokens=m, **simkw))
+    return sim.run(wl)
+
+
+@pytest.mark.slow
+def test_andes_beats_fcfs_under_overload():
+    """Core claim: under high load Andes improves avg QoE and tames TTFT."""
+    fcfs = run_tight("fcfs")
+    andes = run_tight("andes")
+    assert andes.avg_qoe() > fcfs.avg_qoe() + 0.1
+    assert np.percentile(andes.ttfts(), 90) < np.percentile(fcfs.ttfts(), 90) / 5
+
+
+@pytest.mark.slow
+def test_andes_throughput_drop_small():
+    """Throughput cost of preemption stays bounded even in deep overload
+    (paper's <=10% applies at its operating points; benchmarks reproduce
+    that — this tight regime is ~1.7x over capacity)."""
+    fcfs = run_tight("fcfs")
+    andes = run_tight("andes")
+    assert andes.throughput() > 0.75 * fcfs.throughput()
+
+
+@pytest.mark.slow
+def test_preemption_frequency_bounded():
+    """Paper §6.2.3 / Fig 13: ~<= 1 preemption per request on average."""
+    res = run_tight("andes")
+    assert res.preemption_freq() <= 1.5
+
+
+def test_recompute_mode_runs():
+    res = run_tight("andes", n=150, preemption_mode="recompute")
+    assert all(r.generated >= r.output_len for r in res.requests)
+
+
+def test_round_robin_rotates():
+    res = run_tight("round_robin")
+    assert res.preemptions > 0

@@ -1,0 +1,63 @@
+"""End-to-end system behaviour: the paper's headline pipeline.
+
+Workload -> Andes scheduler -> serving -> client token buffer -> QoE, both
+on the simulator (paper scale) and the real engine (real model on CPU).
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.core import (
+    A100_4X,
+    LatencyModel,
+    QoESpec,
+    SchedulerConfig,
+    TPU_V5E,
+    TokenBuffer,
+    make_scheduler,
+)
+from repro.models import Model
+from repro.serving import Request, ServingEngine
+from repro.serving.simulator import ServingSimulator, SimConfig
+from repro.workload import make_workload
+
+
+def test_end_to_end_sim_pipeline():
+    """Full paper pipeline at the OPT-66B operating point."""
+    cfg = get_config("opt-66b")
+    lat = LatencyModel(cfg, A100_4X)
+    m = 65_000
+    wl = make_workload(300, 3.3, seed=7)
+    sched = make_scheduler("andes", m, lat, SchedulerConfig())
+    res = ServingSimulator(sched, lat, SimConfig(kv_capacity_tokens=m)).run(wl)
+    assert all(r.generated >= r.output_len for r in res.requests)
+    assert res.avg_qoe() > 0.85
+    # token buffer invariant: user-visible TDS never exceeds expectation
+    for r in res.requests[:50]:
+        buf = TokenBuffer(r.spec.tds)
+        deliveries = [buf.push(t) for t in r.emit_times]
+        gaps = np.diff(deliveries)
+        assert np.all(gaps >= 1.0 / r.spec.tds - 1e-9)
+
+
+def test_end_to_end_real_engine_qoe():
+    """Real model + Andes + contention: good QoE, exact accounting."""
+    cfg = get_smoke_config("llama3-8b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    lat = LatencyModel(cfg, TPU_V5E)
+    rng = np.random.default_rng(5)
+    wl = []
+    for i in range(10):
+        plen = int(rng.integers(8, 20))
+        wl.append(Request(rid=i, arrival=i * 0.02, prompt_len=plen,
+                          output_len=12, spec=QoESpec(ttft=1.0, tds=4.8),
+                          prompt_tokens=rng.integers(0, cfg.vocab_size, plen)))
+    cap = 250
+    eng = ServingEngine(model, params,
+                        make_scheduler("andes", cap, lat, SchedulerConfig()),
+                        lat, num_slots=4, max_seq=64, capacity_tokens=cap)
+    out = eng.run(wl, max_iterations=3000)
+    assert all(r.generated >= r.output_len for r in out)
+    qoes = [r.final_qoe() for r in out]
+    assert np.mean(qoes) > 0.8

@@ -1,0 +1,68 @@
+"""Workload generation (§6.1): arrivals, lengths, QoE traces."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.workload import (
+    gamma_arrivals,
+    make_workload,
+    poisson_arrivals,
+    reading_qoe_trace,
+    sample_lengths,
+    voice_qoe_trace,
+)
+
+
+def test_poisson_rate():
+    rng = np.random.default_rng(0)
+    a = poisson_arrivals(3.3, 20_000, rng)
+    rate = len(a) / a[-1]
+    assert abs(rate - 3.3) / 3.3 < 0.05
+
+
+def test_gamma_same_mean_higher_cv():
+    rng = np.random.default_rng(0)
+    g = gamma_arrivals(3.3, 50_000, rng, cv=3.0)
+    gaps = np.diff(np.concatenate([[0], g]))
+    assert abs(gaps.mean() - 1 / 3.3) / (1 / 3.3) < 0.05
+    cv = gaps.std() / gaps.mean()
+    assert cv > 2.0     # bursty
+
+
+def test_lengths_reasonable():
+    rng = np.random.default_rng(0)
+    p, o = sample_lengths(20_000, rng, "sharegpt")
+    assert 100 < np.median(p) < 250          # Fig. 9 ShareGPT inputs
+    assert 150 < np.median(o) < 300
+    assert p.max() <= 1024 and o.max() <= 1024
+    p2, _ = sample_lengths(20_000, rng, "multiround")
+    assert np.median(p2) > 2.0 * np.median(p)   # ~3x longer inputs
+
+
+def test_reading_trace_mean():
+    rng = np.random.default_rng(0)
+    specs = reading_qoe_trace(10_000, rng)
+    tds = np.array([s.tds for s in specs])
+    assert 4.2 < tds.mean() < 5.2            # paper: ~4.8 tokens/s
+    assert all(s.ttft == 1.0 for s in specs)
+
+
+def test_voice_trace_slower():
+    rng = np.random.default_rng(0)
+    r = np.mean([s.tds for s in reading_qoe_trace(5000, rng)])
+    v = np.mean([s.tds for s in voice_qoe_trace(5000, rng)])
+    assert v < r                              # speaking < reading
+    assert 3.0 < v < 4.0                      # paper: ~3.3 tokens/s
+
+
+@given(st.integers(1, 200), st.floats(0.5, 10.0), st.integers(0, 100))
+@settings(max_examples=30, deadline=None)
+def test_workload_wellformed(n, rate, seed):
+    wl = make_workload(n, rate, seed=seed)
+    assert len(wl) == n
+    arr = [r.arrival for r in wl]
+    assert arr == sorted(arr)
+    for r in wl:
+        assert r.prompt_len >= 4 and r.output_len >= 4
+        assert r.spec.tds > 0 and r.spec.ttft > 0
