@@ -1,0 +1,23 @@
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-fast bench bench-cluster example-cluster
+
+# tier-1 verify (same command as ROADMAP.md)
+test:
+	$(PYTHON) -m pytest -x -q
+
+# skip the long paper-claim tests
+test-fast:
+	$(PYTHON) -m pytest -x -q -m "not slow"
+
+# all paper figures/tables (quick CI profile)
+bench:
+	$(PYTHON) -m benchmarks.run
+
+# cluster serving sweep: router policy x fleet size x burst cv (+ admission)
+bench-cluster:
+	$(PYTHON) -m benchmarks.cluster_qoe --out cluster_qoe.json
+
+example-cluster:
+	$(PYTHON) examples/serve_cluster.py

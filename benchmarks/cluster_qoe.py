@@ -1,0 +1,148 @@
+"""Cluster serving — router policy × fleet size × burst cv (+ admission).
+
+Extends the paper's single-engine evaluation (§6) to the fleet layer
+(repro.cluster): N replicas fed by one gamma-burst arrival trace, with the
+Andes scheduler inside every replica. The sweep compares fleet routers on
+a *heterogeneous* fleet (alternating 4xA100 / 4xA40 — both hardware points
+the paper itself evaluates, Fig. 15a), which is where routing policy has
+real leverage: DiSCo-style capability-aware dispatch beats queue feedback
+that cannot tell a fast replica from a slow one, and both beat blind
+round-robin. A second section shows admission control degrading gracefully
+under deep surge (§6.4 fleet-wide): shedding/deferring negative-gain
+requests lifts the QoE of everyone actually served.
+
+Run via `python -m benchmarks.run --only cluster` (CSV rows, like every
+figure module) or `python -m benchmarks.cluster_qoe [--out cluster.json]`
+for a standalone JSON dump.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import A40_4X, A100_4X, LatencyModel
+from repro.cluster import AdmissionConfig, ClusterConfig, ClusterSimulator
+from repro.workload import make_workload
+
+MODEL = "opt-66b"
+KV_PER_REPLICA = 40_000
+ROUTERS = ("round_robin", "jsq", "qoe")
+# per-fleet-size aggregate rates: ~near the heterogeneous fleet's capacity
+# (1xA100+1xA40 sustains ~4.2 req/s of the reading trace)
+FLEET_POINTS = {2: 4.5, 4: 9.0}
+
+
+def _lat_models():
+    cfg = get_config(MODEL)
+    return [LatencyModel(cfg, A100_4X), LatencyModel(cfg, A40_4X)]
+
+
+def _run_point(router: str, n_replicas: int, rate: float, cv: float,
+               seed: int, n: int):
+    cfg = ClusterConfig(
+        n_replicas=n_replicas,
+        router=router,
+        kv_capacity_tokens=KV_PER_REPLICA,
+    )
+    wl = make_workload(n, rate, seed=seed, arrival="gamma", cv=cv)
+    return ClusterSimulator(_lat_models(), cfg).run(wl)
+
+
+def _router_sweep(quick: bool):
+    rows = []
+    seeds = (1, 2, 3) if quick else (1, 2, 3, 4, 5)
+    cvs = (3.0,) if quick else (1.5, 3.0, 6.0)
+    n = 400 if quick else 600
+    for n_replicas, rate in FLEET_POINTS.items():
+        for cv in cvs:
+            qoes = {}
+            for router in ROUTERS:
+                per_seed = [
+                    _run_point(router, n_replicas, rate, cv, s, n).avg_qoe()
+                    for s in seeds
+                ]
+                qoes[router] = float(np.mean(per_seed))
+                rows.append({
+                    "name": (f"cluster/replicas={n_replicas}/cv={cv}"
+                             f"/{router}"),
+                    "avg_qoe": round(qoes[router], 4),
+                    "qoe_std": round(float(np.std(per_seed)), 4),
+                })
+            rows.append({
+                "name": f"cluster/replicas={n_replicas}/cv={cv}/derived",
+                "qoe_minus_jsq": round(qoes["qoe"] - qoes["jsq"], 4),
+                "qoe_minus_rr": round(qoes["qoe"] - qoes["round_robin"], 4),
+            })
+    return rows
+
+
+def _admission_sweep(quick: bool):
+    """Deep surge on an undersized homogeneous fleet: admitting everything
+    is fleet-QoE-negative; shed/defer protect the served."""
+    rows = []
+    lat = LatencyModel(get_config(MODEL), A100_4X)
+    n = 300 if quick else 500
+    served_qoe = {}
+    for policy in ("none", "shed", "defer"):
+        cfg = ClusterConfig(
+            n_replicas=2, router="qoe", kv_capacity_tokens=12_000,
+            admission=AdmissionConfig(policy=policy),
+        )
+        wl = make_workload(n, 20.0, seed=2, arrival="gamma", cv=3.0)
+        res = ClusterSimulator(lat, cfg).run(wl)
+        served_qoe[policy] = res.avg_qoe(include_shed=False)
+        rows.append({
+            "name": f"cluster/admission/{policy}",
+            "avg_qoe_served": round(res.avg_qoe(include_shed=False), 4),
+            "avg_qoe_incl_shed": round(res.avg_qoe(), 4),
+            "shed": len(res.shed),
+            "defer_events": res.n_defer_events,
+        })
+    rows.append({
+        "name": "cluster/admission/derived",
+        "shed_served_uplift": round(served_qoe["shed"] - served_qoe["none"], 4),
+        "defer_served_uplift": round(
+            served_qoe["defer"] - served_qoe["none"], 4),
+    })
+    return rows
+
+
+def run(quick: bool = False):
+    return _router_sweep(quick) + _admission_sweep(quick)
+
+
+def validate(rows) -> str:
+    d = {r["name"]: r for r in rows}
+    checks = []
+    ok = True
+    for n_replicas in FLEET_POINTS:
+        key = f"cluster/replicas={n_replicas}/cv=3.0/derived"
+        if key in d:
+            dj, dr = d[key]["qoe_minus_jsq"], d[key]["qoe_minus_rr"]
+            ok &= dj > 0 and dr > 0
+            checks.append(f"r{n_replicas}: qoe-jsq {dj:+.3f} qoe-rr {dr:+.3f}")
+    adm = d.get("cluster/admission/derived")
+    if adm:
+        ok &= adm["shed_served_uplift"] > 0
+        checks.append(f"shed uplift {adm['shed_served_uplift']:+.3f}")
+    verdict = "OK" if ok else "MISMATCH"
+    return (f"{verdict}: QoE router vs jsq/rr at cv=3 gamma "
+            f"({'; '.join(checks)}); expected qoe > both and shed uplift > 0")
+
+
+if __name__ == "__main__":
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default=None, help="write rows as JSON here")
+    args = ap.parse_args()
+    rows = run(quick=not args.full)
+    for r in rows:
+        print(r)
+    print(validate(rows))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=2)
+        print(f"wrote {args.out}")

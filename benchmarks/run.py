@@ -15,6 +15,7 @@ import time
 
 from benchmarks import (
     appendixA_objectives,
+    cluster_qoe,
     fig03_motivation,
     fig10_qoe_sharegpt,
     fig11_qoe_multiround,
@@ -39,6 +40,7 @@ MODULES = {
     "fig16_18": fig16_18_sensitivity,
     "fig21": fig21_norm_latency,
     "appendixA": appendixA_objectives,
+    "cluster": cluster_qoe,
     "kernels": kernels_micro,
     "roofline": roofline,
 }

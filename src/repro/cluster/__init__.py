@@ -1,0 +1,46 @@
+"""QoE-aware multi-replica cluster serving over the Andes engine.
+
+The paper (§4–§6) maximizes QoE *within one* continuous-batching engine;
+this package adds the fleet layer a production deployment needs on top:
+
+  replica.py      Replica — one engine behind submit/step/drain (wraps the
+                  discrete-event ServingSimulator; any SteppableBackend,
+                  e.g. a stepped real Engine, plugs in).
+  router.py       Round-robin, join-shortest-queue, and a QoE-aware policy
+                  that places each request where its predicted marginal
+                  fleet QoE gain — priced with the replica's FluidQoE +
+                  LatencyModel — is largest (DiSCo-style dispatching).
+  admission.py    Shed/defer requests whose admission would *lower* fleet
+                  QoE (paper §6.4 graceful degradation, fleet-wide).
+  autoscaler.py   Grow/drain the fleet on the §6.1 QoE-SLO attainment
+                  signal; draining replicas finish in-flight requests.
+  cluster_sim.py  ClusterSimulator — drives N replicas off one arrival
+                  trace and reports fleet QoE (shed requests count as 0).
+
+A 1-replica cluster reproduces the single-node simulator bit-for-bit.
+"""
+from repro.cluster.admission import AdmissionConfig, AdmissionController
+from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig, ScaleEvent
+from repro.cluster.cluster_sim import ClusterConfig, ClusterResult, ClusterSimulator
+from repro.cluster.replica import Replica, SteppableBackend
+from repro.cluster.router import (
+    ROUTERS,
+    JSQRouter,
+    QoEAwareRouter,
+    RoundRobinRouter,
+    RouteDecision,
+    Router,
+    RouterConfig,
+    make_router,
+    marginal_qoe_gain,
+)
+
+__all__ = [
+    "Replica", "SteppableBackend",
+    "Router", "RouterConfig", "RouteDecision", "RoundRobinRouter",
+    "JSQRouter", "QoEAwareRouter", "ROUTERS", "make_router",
+    "marginal_qoe_gain",
+    "AdmissionConfig", "AdmissionController",
+    "Autoscaler", "AutoscalerConfig", "ScaleEvent",
+    "ClusterConfig", "ClusterResult", "ClusterSimulator",
+]

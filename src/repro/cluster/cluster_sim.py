@@ -1,0 +1,248 @@
+"""ClusterSimulator: N replicas, one arrival trace, fleet-wide QoE.
+
+The top of the cluster stack (see this package's __init__ for the map):
+pops arrivals in time order, advances every replica's discrete-event clock
+to the arrival (iterations are indivisible, exactly as in the single-node
+simulator), lets the Autoscaler react, the Router place, and the
+AdmissionController admit/defer/shed — then drains the fleet and reports
+QoE over *all* requests, shed ones included (paper Eq. 1 gives an
+unserved request QoE 0, which is what "degrade gracefully under surge",
+§6.4, must be measured against).
+
+A 1-replica cluster with admission and autoscaling off reproduces the
+single-node `ServingSimulator` token timeline bit-for-bit — the cluster
+layer only ever *adds* decisions around the engine, never changes it
+(regression-tested in tests/test_cluster.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.latency_model import LatencyModel
+from repro.core.objectives import fleet_slo_attainment
+from repro.core.request import Request
+from repro.core.scheduler import SchedulerConfig, make_scheduler
+from repro.serving.simulator import ServingSimulator, SimConfig, SimResult
+from repro.cluster.admission import ADMIT, DEFER, AdmissionConfig, AdmissionController
+from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig, ScaleEvent
+from repro.cluster.replica import Replica
+from repro.cluster.router import RouterConfig, make_router
+
+
+@dataclasses.dataclass
+class ClusterConfig:
+    n_replicas: int = 2
+    scheduler: str = "andes"
+    router: str = "qoe"                 # round_robin | jsq | qoe
+    kv_capacity_tokens: int = 65_000    # per replica
+    preemption_mode: str = "swap"
+    max_sim_time: float = 10_000.0
+    sched_cfg: Optional[SchedulerConfig] = None
+    router_cfg: Optional[RouterConfig] = None
+    admission: Optional[AdmissionConfig] = None     # None -> admit all
+    autoscaler: Optional[AutoscalerConfig] = None   # None -> fixed fleet
+
+
+@dataclasses.dataclass
+class ClusterResult:
+    admitted: List[Request]
+    shed: List[Request]
+    n_defer_events: int
+    makespan: float
+    replica_results: Dict[int, SimResult]
+    scale_events: List[ScaleEvent]
+    peak_replicas: int
+
+    # ---- fleet metrics -----------------------------------------------------
+    def qoes(self, include_shed: bool = True) -> np.ndarray:
+        q = [r.final_qoe() for r in self.admitted]
+        if include_shed:
+            q += [0.0] * len(self.shed)
+        return np.array(q)
+
+    def avg_qoe(self, include_shed: bool = True) -> float:
+        q = self.qoes(include_shed)
+        return float(q.mean()) if q.size else 1.0
+
+    def slo_attainment(self, threshold: float = 0.9,
+                       include_shed: bool = True) -> float:
+        per_rep = [np.array([r.final_qoe() for r in res.requests])
+                   for res in self.replica_results.values()]
+        return fleet_slo_attainment(
+            per_rep, threshold,
+            n_shed=len(self.shed) if include_shed else 0)
+
+    def shed_rate(self) -> float:
+        n = len(self.admitted) + len(self.shed)
+        return len(self.shed) / max(n, 1)
+
+    def ttfts(self) -> np.ndarray:
+        return np.array([r.final_ttft() for r in self.admitted])
+
+    def total_tokens(self) -> int:
+        return sum(res.total_tokens for res in self.replica_results.values())
+
+    def throughput(self) -> float:
+        return self.total_tokens() / self.makespan if self.makespan > 0 else 0.0
+
+    def preemptions(self) -> int:
+        return sum(res.preemptions for res in self.replica_results.values())
+
+    def per_tenant_avg_qoe(self) -> Dict[int, float]:
+        acc: Dict[int, List[float]] = {}
+        for r in self.admitted:
+            acc.setdefault(r.tenant, []).append(r.final_qoe())
+        for r in self.shed:
+            acc.setdefault(r.tenant, []).append(0.0)
+        return {k: float(np.mean(v)) for k, v in sorted(acc.items())}
+
+
+class ClusterSimulator:
+    """`lat` may be a single LatencyModel (homogeneous fleet) or a sequence
+    of them — replica i runs on lat[i % len(lat)], which models a
+    heterogeneous fleet (e.g. the paper's 4xA100 and 4xA40 deployments side
+    by side; DiSCo-style dispatching is where the QoE router's pricing of
+    each replica's hardware pays off)."""
+
+    def __init__(self, lat, cfg: Optional[ClusterConfig] = None):
+        self.lats: List[LatencyModel] = (
+            list(lat) if isinstance(lat, (list, tuple)) else [lat]
+        )
+        self.cfg = cfg or ClusterConfig()
+        if self.cfg.n_replicas < 1:
+            raise ValueError("ClusterConfig.n_replicas must be >= 1")
+        if not self.lats:
+            raise ValueError("at least one LatencyModel is required")
+        self.router = make_router(self.cfg.router, self.cfg.router_cfg)
+        self.admission = AdmissionController(
+            self.cfg.admission or AdmissionConfig(),
+            self.cfg.router_cfg,
+        )
+        self.autoscaler = (Autoscaler(self.cfg.autoscaler)
+                           if self.cfg.autoscaler else None)
+        self._rep_ids = itertools.count()
+        self.replicas: List[Replica] = [
+            self._new_replica(0.0) for _ in range(self.cfg.n_replicas)
+        ]
+        self.retired: List[Replica] = []
+        self.peak_replicas = len(self.replicas)
+
+    # ----------------------------------------------------------------- fleet
+    def _new_replica(self, launched_at: float) -> Replica:
+        cfg = self.cfg
+        rid = next(self._rep_ids)
+        lat = self.lats[rid % len(self.lats)]
+        sched_cfg = dataclasses.replace(cfg.sched_cfg) if cfg.sched_cfg \
+            else SchedulerConfig()
+        sched = make_scheduler(cfg.scheduler, cfg.kv_capacity_tokens,
+                               lat, sched_cfg)
+        sim = ServingSimulator(sched, lat, SimConfig(
+            kv_capacity_tokens=cfg.kv_capacity_tokens,
+            preemption_mode=cfg.preemption_mode,
+            max_sim_time=cfg.max_sim_time,
+        ))
+        sim.now = launched_at        # replica is born at provision time
+        return Replica(rid, sim, lat, launched_at=launched_at)
+
+    def _advance_all(self, t: float) -> None:
+        for rep in self.replicas:
+            rep.advance_to(t)
+
+    def _reap_drained(self, t: float) -> None:
+        """Retire fully drained replicas (they keep their results)."""
+        still, gone = [], []
+        for rep in self.replicas:
+            (gone if rep.drained else still).append(rep)
+        for rep in gone:
+            self.autoscaler.record_reap(t, rep)
+        self.replicas, self.retired = still, self.retired + gone
+
+    def _autoscale(self, t: float) -> None:
+        if self.autoscaler is None:
+            return
+        for _ in range(self.autoscaler.take_ready_provisions(t)):
+            self.replicas.append(self._new_replica(t))
+        self.autoscaler.evaluate(t, self.replicas)
+        self._reap_drained(t)
+        self.peak_replicas = max(self.peak_replicas, len(self.replicas))
+
+    # ------------------------------------------------------------------- run
+    def run(self, workload: List[Request]) -> ClusterResult:
+        cfg = self.cfg
+        seq = itertools.count()
+        # heap of (route_at, tiebreak, request); deferred requests re-enter
+        # with a later route_at but keep their original arrival (their QoE
+        # clock started when the user hit enter)
+        queue = [(r.arrival, next(seq), r)
+                 for r in sorted(workload, key=lambda r: r.arrival)]
+        heapq.heapify(queue)
+        admitted: List[Request] = []
+        shed: List[Request] = []
+
+        while queue:
+            route_at, _, req = heapq.heappop(queue)
+            self._advance_all(route_at)
+            self._autoscale(route_at)
+            routable = [r for r in self.replicas if not r.draining]
+            if not routable:
+                # fleet drained to nothing (e.g. min_replicas=0 during a
+                # lull): un-drain the newest replica, or provision a fresh
+                # one, rather than dropping traffic on the floor
+                if self.replicas:
+                    self.replicas[-1].draining = False
+                    routable = [self.replicas[-1]]
+                else:
+                    rep = self._new_replica(route_at)
+                    self.replicas.append(rep)
+                    self.peak_replicas = max(self.peak_replicas,
+                                             len(self.replicas))
+                    routable = [rep]
+            decision = self.router.route(req, routable, route_at)
+            action = self.admission.decide(req, decision, route_at)
+            if action == ADMIT:
+                decision.replica.submit(req)
+                admitted.append(req)
+            elif action == DEFER:
+                heapq.heappush(
+                    queue,
+                    (route_at + self.admission.cfg.defer_delay,
+                     next(seq), req),
+                )
+            else:
+                shed.append(req)
+
+        # ---- drain: every replica finishes its in-flight work ------------
+        for rep in self.replicas + self.retired:
+            while rep.step():
+                pass
+        if self.autoscaler is not None:
+            # no more arrivals: cancel in-flight provisions (a replica that
+            # comes up after the last request would serve nothing and only
+            # inflate peak_replicas), then reap whatever finished draining.
+            # Deliberately NOT a full _autoscale: re-running evaluate here
+            # would record phantom scale decisions after the trace ended.
+            self.autoscaler.pending_provisions.clear()
+            t_end = max((rep.clock for rep in self.replicas + self.retired),
+                        default=0.0)
+            self._reap_drained(t_end)
+
+        all_reps = self.replicas + self.retired
+        results = {rep.id: rep.result() for rep in all_reps}
+        makespan = max(
+            (res.makespan for res in results.values() if res.requests),
+            default=0.0,
+        )
+        return ClusterResult(
+            admitted=admitted,
+            shed=shed,
+            n_defer_events=self.admission.n_defer_events,
+            makespan=makespan,
+            replica_results=results,
+            scale_events=list(self.autoscaler.events) if self.autoscaler else [],
+            peak_replicas=self.peak_replicas,
+        )

@@ -1,0 +1,129 @@
+"""Replica: one serving engine behind a uniform submit/step/drain API.
+
+Extends the paper's single-engine scope (§4–§6 run ONE continuous-batching
+instance) to the fleet: a `Replica` wraps a backend with its own scheduler,
+KV capacity, and fluid QoE state, and exposes exactly what the cluster
+layer needs — enqueue a routed request, advance the replica's clock, and
+report load/QoE snapshots for routing decisions.
+
+The default backend is the discrete-event `ServingSimulator`; anything
+satisfying `SteppableBackend` (notably a stepped `ServingEngine` running a
+real JAX model) plugs in unchanged, because the cluster layer only ever
+talks through this protocol.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Protocol
+
+from repro.core.latency_model import LatencyModel
+from repro.core.qoe import FluidQoE
+from repro.core.request import Request
+from repro.core.scheduler import Scheduler
+from repro.serving.simulator import ServingSimulator, SimResult
+
+
+class SteppableBackend(Protocol):
+    """Minimal engine surface the cluster layer depends on."""
+    sched: Scheduler
+    fluid: FluidQoE
+    live: List[Request]
+    pending: List[Request]       # submitted, not yet admitted to the batch
+    seen: List[Request]          # every request ever submitted
+    now: float
+    has_work: bool
+
+    def submit(self, req: Request) -> None: ...
+    def step(self) -> bool: ...
+    def result(self) -> SimResult: ...
+
+
+class Replica:
+    """One engine instance in the fleet."""
+
+    def __init__(
+        self,
+        replica_id: int,
+        backend: SteppableBackend,
+        lat: LatencyModel,
+        *,
+        launched_at: float = 0.0,
+    ):
+        self.id = replica_id
+        self.backend = backend
+        self.lat = lat
+        self.launched_at = launched_at
+        self.draining = False
+        self.drained_at: Optional[float] = None
+        self.n_routed = 0
+
+    # -------------------------------------------------------------- lifecycle
+    def submit(self, req: Request) -> None:
+        if self.draining:
+            raise RuntimeError(f"replica {self.id} is draining")
+        self.n_routed += 1
+        self.backend.submit(req)
+
+    def step(self) -> bool:
+        return self.backend.step()
+
+    def advance_to(self, t: float) -> None:
+        """Run iterations until the replica's clock reaches t (or idle).
+        Iterations are indivisible (continuous batching), so the clock may
+        overshoot t — identical to how a single engine admits arrivals at
+        the next iteration boundary."""
+        while self.backend.has_work and self.backend.now < t:
+            if not self.step():
+                break
+
+    def drain(self) -> None:
+        """Stop accepting new requests; in-flight requests finish."""
+        self.draining = True
+
+    @property
+    def drained(self) -> bool:
+        return self.draining and not self.backend.has_work
+
+    # ------------------------------------------------------------------ views
+    @property
+    def clock(self) -> float:
+        return self.backend.now
+
+    @property
+    def has_work(self) -> bool:
+        return self.backend.has_work
+
+    @property
+    def live(self) -> List[Request]:
+        return self.backend.live
+
+    @property
+    def pending(self) -> List[Request]:
+        return self.backend.pending
+
+    def committed(self) -> List[Request]:
+        """Live + pending: every request this replica is on the hook for.
+        Routing decisions during a burst happen faster than the replica
+        steps, so load views must count work that was just routed here even
+        though the engine has not admitted it yet (otherwise every policy
+        herds the whole burst onto one replica)."""
+        return self.backend.live + self.backend.pending
+
+    @property
+    def fluid(self) -> FluidQoE:
+        return self.backend.fluid
+
+    @property
+    def kv_capacity(self) -> int:
+        return self.backend.sched.M
+
+    def kv_demand(self) -> int:
+        st = self.backend.sched.cfg.state_equiv_tokens
+        return sum(r.kv_tokens(st) for r in self.committed())
+
+    def result(self) -> SimResult:
+        return self.backend.result()
+
+    def __repr__(self) -> str:  # pragma: no cover — debugging aid
+        flag = " draining" if self.draining else ""
+        return (f"Replica({self.id}, t={self.clock:.2f}, "
+                f"live={len(self.live)}{flag})")

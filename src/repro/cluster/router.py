@@ -1,0 +1,275 @@
+"""Fleet routers: which replica does a request land on?
+
+Extends the paper's intra-engine QoE scheduling (§4, Eq. 2 gains) one
+level up, in the spirit of DiSCo's dispatching across endpoints
+(PAPERS.md, arXiv 2502.11417): the same fluid QoE machinery that prices a
+*batch slot* inside one engine prices a *placement* across engines.
+
+Policies:
+  * round_robin — classic stateless spreading.
+  * jsq         — join-shortest-queue on committed request count
+                  (deterministic tie-break: lowest replica id).
+  * qoe         — two-level decision. The *predicted marginal fleet QoE
+                  gain* of the placement (marginal_qoe_gain: the
+                  newcomer's own achievable QoE after KV-overcommit and
+                  prefill-backlog delays, minus the fluid-predicted
+                  degradation of the replica's live requests) decides
+                  whenever replicas diverge by more than `gain_quantum` —
+                  a saturated or memory-full replica loses here. Within a
+                  gain tie, load balances on the *capability-normalized*
+                  queue (committed count over the replica's roofline token
+                  rate): on a heterogeneous fleet an A40 with the same
+                  queue as an A100 is ~2.5x busier, which count-based JSQ
+                  cannot see.
+
+An empirical note that shaped this design (benchmarks/cluster_qoe.py):
+with the QoE-aware Andes scheduler *inside* each replica absorbing
+placement imperfections (preempting lenient requests under pressure), the
+fleet's average QoE is remarkably insensitive to spatial routing among
+equally-capable replicas — fancy open-loop placement models lose to plain
+queue feedback. The router's edge comes from pricing what feedback cannot
+see: replica capability (LatencyModel) and imminent saturation
+(FluidQoE-predicted gains).
+
+Every policy sees only `Replica` snapshots/state; none mutate replica
+fluid state (the QoE policy queries a clone), preserving the 1-replica
+bit-for-bit invariance with the single-node simulator.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.qoe import predict_request_qoe
+from repro.core.request import Request, ReqState
+from repro.cluster.replica import Replica
+
+
+@dataclasses.dataclass
+class RouterConfig:
+    horizon: float = 30.0           # prediction horizon Δt (s), fleet scale
+    min_remaining_est: float = 64.0  # floor on l̂ − emitted (as scheduler)
+    gain_quantum: float = 0.25      # gains within this are considered tied
+                                    # and fall through to the normalized-
+                                    # queue tiebreak. Gains are decisive
+                                    # only for genuine saturation gaps; a
+                                    # small quantum would let model noise
+                                    # override load feedback (and below
+                                    # saturation every replica predicts
+                                    # gain 1.0, so with no tiebreak the
+                                    # argmax herds onto one replica)
+
+
+@dataclasses.dataclass
+class RouteDecision:
+    replica: Replica
+    gain: Optional[float] = None    # predicted marginal fleet QoE gain
+    scores: Optional[dict] = None   # replica id -> score (qoe policy)
+
+
+def shared_token_rate(
+    lat,
+    n_live: int,
+    total_ctx: float,
+    kv_capacity: int,
+    state_equiv_tokens: int = 0,
+) -> float:
+    """Memory-capped, time-shared per-request decode rate (tokens/s).
+
+    A replica with more live requests than fit in KV memory cannot decode
+    them concurrently — the scheduler time-shares. The sustainable batch is
+    capped by memory (b_mem = M / avg KV weight); the aggregate token rate
+    at that batch is then split across *all* live requests. This is what
+    makes the marginal cost of one more request real on a saturated
+    replica (naive rate(b) vs rate(b+1) is near-zero at large b, which
+    would admit forever — the tragedy of the commons the admission
+    controller exists to prevent).
+    """
+    if n_live <= 0:
+        return 0.0
+    avg_ctx = total_ctx / n_live
+    avg_w = state_equiv_tokens if state_equiv_tokens else avg_ctx
+    b_mem = max(int(kv_capacity / max(avg_w, 1.0)), 1)
+    b_eff = min(n_live, b_mem)
+    agg = b_eff / lat.iter_latency(b_eff, int(b_eff * avg_ctx))
+    return agg / n_live
+
+
+def marginal_qoe_gain(
+    replica: Replica,
+    req: Request,
+    now: float,
+    cfg: RouterConfig,
+) -> float:
+    """Predicted fleet QoE change of placing `req` on `replica` now.
+
+    gain = Q̂_new  +  Σ_live (Q̂_with − Q̂_without)
+
+    where Q̂_new is the newcomer's predicted fluid QoE (horizon Δt) and the
+    second term is the degradation of the replica's live requests. Two
+    harm channels are priced:
+
+      * rate sharing — one more mouth shares the memory-capped token
+        supply (shared_token_rate). Thanks to the paper's central slack
+        (generation speed ≫ digest speed) this alone rarely hurts;
+      * queueing — the newcomer's KV footprint pushes back the start time
+        of every *waiting* request. Per-request the extra delay is tiny,
+        but summed over a deep queue it outweighs the newcomer's own
+        achievable QoE. This is the term that turns the gain negative
+        under surge and makes admission control bite.
+
+    On an idle replica gain ≈ 1 (full QoE, nobody hurt); on a saturated
+    one it goes negative — the admission controller's shed signal.
+    """
+    lat = replica.lat
+    live = replica.live
+    committed = replica.committed()      # live + routed-but-not-yet-admitted
+    b = len(committed)
+    ctx = sum(r.context_len for r in committed)
+    t = max(now, replica.clock)
+    dt = cfg.horizon
+    mean_out = replica.backend.sched.mean_output_len
+    st = replica.backend.sched.cfg.state_equiv_tokens
+    M = replica.kv_capacity
+
+    exp_new = max(mean_out, cfg.min_remaining_est)
+    demand = replica.kv_demand()
+    footprint = req.kv_tokens(st) + (0 if st else int(exp_new))
+
+    rate1 = shared_token_rate(lat, b + 1, ctx + req.prompt_len, M, st)
+    # KV-overcommit queueing delay before a waiting request starts: excess
+    # demand has to drain (at the aggregate token rate) before its KV fits
+    wait1 = max(demand + footprint - M, 0) / max(rate1 * (b + 1), 1e-9)
+    # prefill serialization: every committed-but-unprefilled request blocks
+    # the engine for its prefill before the newcomer's can run (non-chunked
+    # prefill, §2.2). During a burst this is the *leading* congestion
+    # signal — KV and rate terms only move once damage is already done —
+    # and it is hardware-aware (slow chips prefill slower).
+    prefill_backlog = sum(
+        lat.prefill_latency(r.context_len)
+        for r in committed if not r.prefilled
+    )
+
+    # -- degradation of the replica's live requests -------------------------
+    # (pending requests contribute to load above but have no fluid slot yet,
+    # so only live requests enter the degradation sum)
+    degradation = 0.0
+    if live:
+        rate0 = shared_token_rate(lat, b, ctx, M, st)
+        wait0 = max(demand - M, 0) / max(rate0 * b, 1e-9)
+        # compact copy of just the live slots (slots are grow-only; cloning
+        # the full state would make routing O(total requests) per query)
+        idx = np.array([r.fluid_idx for r in live])
+        fluid = replica.fluid.clone_slots(idx)
+        waiting = np.array([r.state != ReqState.RUNNING for r in live])
+        exp_len = fluid.emitted + np.maximum(
+            mean_out - fluid.emitted, cfg.min_remaining_est
+        )
+        d0 = np.where(waiting, wait0, 0.0)
+        d1 = np.where(waiting, wait1, 0.0)
+        q0 = fluid.predict_qoe(t, dt, rate0, delay=d0, exp_len=exp_len)
+        q1 = fluid.predict_qoe(t, dt, rate1, delay=d1, exp_len=exp_len)
+        degradation = float(np.sum(q0 - q1))
+
+    # -- the newcomer's own predicted QoE -----------------------------------
+    # The request's QoE clock runs from its *arrival* (Eq. 1), not from
+    # this routing instant: a deferred request re-enters with dead time on
+    # the clock, which must lower its achievable QoE here — otherwise every
+    # retry would be re-scored as fresh and over-admitted. Shifting both
+    # the delay and the horizon by `age` evaluates the same Eq. 1 window
+    # [arrival, arrival + age + Δt] with delivery starting at age + delay.
+    age = max(t - req.arrival, 0.0)
+    delay = wait1 + prefill_backlog + lat.prefill_latency(req.prompt_len)
+    q_new = predict_request_qoe(req.spec, age + delay, rate1, age + dt,
+                                exp_new)
+
+    return q_new - degradation
+
+
+class Router:
+    """Base router. `route` never returns a draining replica."""
+
+    name = "base"
+
+    def __init__(self, cfg: Optional[RouterConfig] = None):
+        self.cfg = cfg or RouterConfig()
+
+    def route(self, req: Request, replicas: Sequence[Replica],
+              now: float) -> RouteDecision:
+        raise NotImplementedError
+
+
+class RoundRobinRouter(Router):
+    name = "round_robin"
+
+    def __init__(self, cfg: Optional[RouterConfig] = None):
+        super().__init__(cfg)
+        self._next = 0
+
+    def route(self, req, replicas, now):
+        rep = replicas[self._next % len(replicas)]
+        self._next += 1
+        return RouteDecision(rep)
+
+
+class JSQRouter(Router):
+    """Join-shortest-queue on committed (live + pending) request count;
+    ties go to the lowest replica id (deterministic)."""
+
+    name = "jsq"
+
+    def route(self, req, replicas, now):
+        rep = min(replicas, key=lambda r: (len(r.committed()), r.id))
+        return RouteDecision(rep)
+
+
+REFERENCE_BATCH = 16
+
+
+def capability(replica: Replica) -> float:
+    """Roofline token supply (tokens/s) of the replica's hardware at a
+    fixed reference batch — a pure per-replica constant, independent of
+    current load. Used to normalize queue depth across a heterogeneous
+    fleet (4xA100 vs 4xA40 differ ~2.5x)."""
+    return REFERENCE_BATCH * replica.lat.token_rate(REFERENCE_BATCH)
+
+
+def normalized_queue(replica: Replica) -> float:
+    """Committed request count over hardware capability: the queue depth
+    in units of 'seconds of work per expected token', comparable across
+    replicas of different speed."""
+    return len(replica.committed()) / max(capability(replica), 1e-9)
+
+
+class QoEAwareRouter(Router):
+    name = "qoe"
+
+    def route(self, req, replicas, now):
+        gains = {r.id: marginal_qoe_gain(r, req, now, self.cfg)
+                 for r in replicas}
+        # lexicographic: quantized gain first; near-ties fall through to
+        # the capability-normalized queue, then to the lowest replica id.
+        # An additive load penalty would override genuine gain differences
+        # under saturation — exactly when the gain signal matters most.
+        quantum = max(self.cfg.gain_quantum, 1e-9)
+        key = {
+            r.id: (round(gains[r.id] / quantum),
+                   -normalized_queue(r),
+                   -r.id)
+            for r in replicas
+        }
+        best = max(replicas, key=lambda r: key[r.id])
+        return RouteDecision(best, gain=gains[best.id], scores=gains)
+
+
+ROUTERS = {
+    "round_robin": RoundRobinRouter,
+    "jsq": JSQRouter,
+    "qoe": QoEAwareRouter,
+}
+
+
+def make_router(name: str, cfg: Optional[RouterConfig] = None) -> Router:
+    return ROUTERS[name](cfg)

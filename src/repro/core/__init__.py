@@ -7,7 +7,19 @@ from repro.core.latency_model import (
     HardwareSpec,
     LatencyModel,
 )
-from repro.core.qoe import FluidQoE, QoESpec, pace_delivery, qoe_exact
+from repro.core.objectives import (
+    FLEET_OBJECTIVES,
+    fleet_avg_qoe,
+    fleet_min_qoe,
+    fleet_slo_attainment,
+)
+from repro.core.qoe import (
+    FluidQoE,
+    QoESpec,
+    pace_delivery,
+    predict_request_qoe,
+    qoe_exact,
+)
 from repro.core.scheduler import (
     SCHEDULERS,
     AndesDPScheduler,
@@ -21,7 +33,8 @@ from repro.core.scheduler import (
 from repro.core.token_buffer import TokenBuffer
 
 __all__ = [
-    "QoESpec", "FluidQoE", "pace_delivery", "qoe_exact",
+    "QoESpec", "FluidQoE", "pace_delivery", "qoe_exact", "predict_request_qoe",
+    "FLEET_OBJECTIVES", "fleet_avg_qoe", "fleet_min_qoe", "fleet_slo_attainment",
     "HardwareSpec", "LatencyModel", "TPU_V5E", "TPU_V5E_POD", "A100_4X", "A40_4X",
     "Scheduler", "SchedulerConfig", "FCFSScheduler", "RoundRobinScheduler",
     "AndesScheduler", "AndesDPScheduler", "SCHEDULERS", "make_scheduler",

@@ -48,3 +48,50 @@ OBJECTIVES = {
     "max_min_qoe": max_min_qoe,
     "perfect_count": perfect_count,
 }
+
+
+# ---------------------------------------------------------------------------
+# Fleet-level aggregation (cluster layer, paper §6.4 extended)
+#
+# The single-engine objectives above value a *batch* choice inside one
+# replica; the cluster router/admission/autoscaler (repro.cluster) need the
+# same vocabulary one level up: how good is the fleet, given each replica's
+# per-request QoE vector? Shed requests enter as zeros — degrading
+# gracefully under surge means accounting for who we turned away.
+# ---------------------------------------------------------------------------
+
+def fleet_qoes(per_replica: "list[np.ndarray]", n_shed: int = 0) -> np.ndarray:
+    """Concatenate per-replica QoE vectors, appending a zero per shed
+    request."""
+    parts = [np.asarray(q, np.float64) for q in per_replica if len(q)]
+    if n_shed:
+        parts.append(np.zeros(n_shed))
+    return np.concatenate(parts) if parts else np.zeros(0)
+
+
+def fleet_avg_qoe(per_replica: "list[np.ndarray]", n_shed: int = 0) -> float:
+    q = fleet_qoes(per_replica, n_shed)
+    return float(q.mean()) if q.size else 1.0
+
+
+def fleet_min_qoe(per_replica: "list[np.ndarray]", n_shed: int = 0) -> float:
+    q = fleet_qoes(per_replica, n_shed)
+    return float(q.min()) if q.size else 1.0
+
+
+def fleet_slo_attainment(
+    per_replica: "list[np.ndarray]",
+    threshold: float = 0.9,
+    n_shed: int = 0,
+) -> float:
+    """Fraction of requests meeting the QoE SLO (§6.1 capacity metric,
+    fleet-wide). This is the autoscaler's feedback signal."""
+    q = fleet_qoes(per_replica, n_shed)
+    return float((q >= threshold).mean()) if q.size else 1.0
+
+
+FLEET_OBJECTIVES = {
+    "fleet_avg_qoe": fleet_avg_qoe,
+    "fleet_min_qoe": fleet_min_qoe,
+    "fleet_slo_attainment": fleet_slo_attainment,
+}

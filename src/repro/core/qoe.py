@@ -107,6 +107,41 @@ def tds_actual(emit_times: np.ndarray) -> float:
     return (e.size - 1) / (e[-1] - e[0])
 
 
+def predict_request_qoe(
+    spec: QoESpec,
+    delay: float,
+    rate: float,
+    dt: float,
+    exp_len: float,
+) -> float:
+    """Fluid QoE of a *fresh* (not yet admitted) request after horizon dt,
+    if its first token appears after `delay` seconds and tokens then flow at
+    `rate` tokens/s until the estimated length `exp_len` is generated.
+
+    Scalar companion of `FluidQoE.predict_qoe` for requests that have no
+    fluid slot yet — the cluster router and admission controller (paper
+    §6.4 surge handling, extended fleet-wide in repro.cluster) score
+    hypothetical placements with it. The client buffer caps the visible
+    delivery speed at the user's expected TDS, so the visible curve ramps
+    at min(rate, tds).
+    """
+    if dt <= 0:
+        return 1.0
+    delay = min(max(delay, 0.0), dt)
+    s_act = 0.0
+    if rate > 0 and delay < dt:
+        vis_rate = min(rate, spec.tds)
+        # visible ramp lasts until exp_len tokens are shown (or horizon)
+        t_ramp = min(dt - delay, exp_len / max(vis_rate, 1e-12))
+        s_act += 0.5 * vis_rate * t_ramp * t_ramp
+        t_flat = (dt - delay) - t_ramp
+        s_act += vis_rate * t_ramp * t_flat
+    s_exp = expected_area(dt, spec, cap=exp_len)
+    if s_exp <= 0.0:
+        return 1.0
+    return float(np.clip(s_act / s_exp, 0.0, 1.0))
+
+
 # ---------------------------------------------------------------------------
 # Fluid (scheduling) path — struct-of-arrays over live requests
 # ---------------------------------------------------------------------------
@@ -130,6 +165,22 @@ class FluidQoE:
     def __init__(self, capacity: int = 0):
         for f in self.FIELDS:
             setattr(self, f, np.zeros(capacity, np.float64))
+
+    def clone_slots(self, idx) -> "FluidQoE":
+        """Compact deep copy of only the given slots (positional reindex).
+
+        The cluster router (repro.cluster.router) evaluates hypothetical
+        placements with `predict_qoe`, whose internal `advance(t)` moves
+        `t_last` forward; querying a copy keeps the replica's own fluid
+        state byte-identical to an unrouted run (the 1-replica invariance
+        guarantee). Slots are grow-only (finished requests keep theirs),
+        so the copy is restricted to the slots the caller cares about —
+        cloning the full state per routing decision would make fleet
+        routing O(total requests) per query."""
+        out = FluidQoE()
+        for f in self.FIELDS:
+            setattr(out, f, getattr(self, f)[idx].copy())
+        return out
 
     def add(self, arrival: float, spec: QoESpec) -> int:
         """Append a request; returns its slot index."""

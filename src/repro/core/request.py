@@ -26,6 +26,7 @@ class Request:
     # ground-truth response length (simulator) / max tokens (engine)
     output_len: int
     prompt_tokens: Optional[np.ndarray] = None       # real engine only
+    tenant: int = 0              # multi-tenant traces (cluster layer)
 
     state: ReqState = ReqState.WAITING
     generated: int = 0

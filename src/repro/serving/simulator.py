@@ -12,9 +12,17 @@ at reporting time.
 This is where Figures 3/10–18/21 and Table 4 are reproduced (the container
 is CPU-only; see DESIGN.md §7 — the real engine in engine.py runs the same
 scheduler against real models on small configs).
+
+The simulator is *steppable*: `submit()` enqueues arrivals, `step()`
+executes one continuous-batching iteration, and `result()` snapshots the
+metrics. `run()` composes them for the classic single-node path, while the
+cluster layer (repro.cluster) drives many simulators as replicas off a
+shared arrival trace — stepping each only as far as the fleet clock
+requires — without changing the per-iteration semantics.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 from typing import Dict, List, Optional
 
@@ -71,6 +79,18 @@ class SimResult:
 
 
 class ServingSimulator:
+    """Single-node continuous-batching simulator.
+
+    Incremental API (used by the cluster layer's `Replica`):
+      submit(req)  enqueue an arrival (any time, in any order)
+      step()       one scheduling+decode iteration; False when out of work
+      has_work     pending or live requests remain
+      result()     SimResult over every request ever submitted
+
+    Batch API (classic single-node experiments):
+      run(workload)  reset + submit all + step to completion
+    """
+
     def __init__(
         self,
         scheduler: Scheduler,
@@ -80,122 +100,174 @@ class ServingSimulator:
         self.sched = scheduler
         self.lat = lat
         self.cfg = sim_cfg
+        self.reset()
+
+    # ------------------------------------------------------------------ state
+    def reset(self) -> None:
+        self.fluid = FluidQoE()
+        self.pending: List[Request] = []     # sorted by arrival
+        self.live: List[Request] = []
+        self.now = 0.0
+        self.total_tokens = 0
+        self.preemptions = 0
+        self.iterations = 0
+        self.batch_sizes: List[int] = []
+        self.host_kv_used = 0
+        self.halted = False                  # hit max_sim_time (permanent)
+        self.stuck = False                   # deadlocked (cleared by submit)
+        self.seen: List[Request] = []        # submit order
+
+    def submit(self, req: Request) -> None:
+        """Enqueue an arrival. Stable insert keeps equal-arrival order."""
+        bisect.insort(self.pending, req, key=lambda r: r.arrival)
+        self.seen.append(req)
+        # a new arrival may be schedulable even if the current live set
+        # deadlocked (e.g. an oversized prompt) — try again
+        self.stuck = False
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.pending or self.live)
+
+    # ---------------------------------------------------------------- helpers
+    def _admit_arrivals(self, t: float) -> None:
+        while self.pending and self.pending[0].arrival <= t:
+            r = self.pending.pop(0)
+            r.fluid_idx = self.fluid.add(r.arrival, r.spec)
+            r.state = ReqState.WAITING
+            self.live.append(r)
+            self.sched.on_request_arrival(r)
+
+    # ------------------------------------------------------------------- step
+    def step(self) -> bool:
+        """One continuous-batching iteration. Returns False when there is
+        nothing left to do (drained or past max_sim_time)."""
+        if self.halted or self.stuck or not (self.pending or self.live):
+            return False
+        if not self.live:
+            self.now = max(self.now, self.pending[0].arrival)
+        self._admit_arrivals(self.now)
+        if not self.live:
+            return True
+        if self.now > self.cfg.max_sim_time:
+            self.halted = True
+            return False
+
+        fluid = self.fluid
+        now = self.now
+        running = [r for r in self.live if r.state == ReqState.RUNNING]
+        if self.cfg.charge_scheduler_overhead:
+            import time as _time
+            _t0 = _time.perf_counter()
+            target = self.sched.schedule(now, self.live, fluid)
+            now += _time.perf_counter() - _t0
+        else:
+            target = self.sched.schedule(now, self.live, fluid)
+        target_set = set(id(r) for r in target)
+
+        # ---- preemptions ------------------------------------------------
+        iter_extra = 0.0
+        newly_preempted = [r for r in running if id(r) not in target_set]
+        for r in newly_preempted:
+            r.preemptions += 1
+            self.preemptions += 1
+            ctx = r.context_len
+            if (self.cfg.preemption_mode == "swap"
+                    and self.host_kv_used + ctx <= self.cfg.host_kv_capacity_tokens):
+                r.state = ReqState.SWAPPED
+                self.host_kv_used += ctx
+                iter_extra += self.lat.swap_latency(ctx)
+            else:
+                # paper §4.2: fall back to recomputation when host RAM full
+                r.state = ReqState.WAITING
+                r.prefilled = False
+        self.sched.record_preemptions(len(newly_preempted))
+
+        # ---- admissions -------------------------------------------------
+        first_emits: List[Request] = []
+        for r in target:
+            if r.state == ReqState.SWAPPED:
+                self.host_kv_used -= r.context_len
+                iter_extra += self.lat.swap_latency(r.context_len)
+                r.state = ReqState.RUNNING
+            elif r.state == ReqState.WAITING:
+                # prefill (recompute includes generated prefix)
+                iter_extra += self.lat.prefill_latency(r.context_len)
+                r.state = ReqState.RUNNING
+                r.prefilled = True
+                if r.generated == 0:
+                    first_emits.append(r)
+
+        running = [r for r in self.live if r.state == ReqState.RUNNING]
+        self.batch_sizes.append(len(running))
+
+        # first tokens come out of prefill itself
+        prefill_done = now + iter_extra
+        for r in first_emits:
+            r.emit_times.append(prefill_done)
+            fluid.emit(r.fluid_idx, prefill_done, 1)
+            r.generated = 1
+            self.total_tokens += 1
+
+        # ---- decode iteration -------------------------------------------
+        decoders = [r for r in running if r.generated < r.output_len]
+        total_ctx = sum(r.context_len for r in decoders)
+        step = self.lat.iter_latency(len(decoders), total_ctx)
+        now = prefill_done + (step if decoders else 0.0)
+        self.iterations += 1
+
+        emit_idx = []
+        for r in decoders:
+            r.emit_times.append(now)
+            r.generated += 1
+            self.total_tokens += 1
+            emit_idx.append(r.fluid_idx)
+        if emit_idx:
+            fluid.emit(np.array(emit_idx), now, 1)
+
+        # ---- completions -------------------------------------------------
+        for r in running:
+            if r.generated >= r.output_len:
+                r.state = ReqState.FINISHED
+                r.finish_time = now
+                self.sched.on_request_finish(r)
+        self.live = [r for r in self.live if r.is_live]
+        self.now = now
+        self._admit_arrivals(now)
+
+        # ---- deadlock guard ----------------------------------------------
+        # A live request that can never be scheduled (e.g. prompt larger
+        # than KV capacity) makes no progress: no admissions or swap-ins
+        # (iter_extra stays 0), no decoders, no preemptions. Jump to the
+        # next arrival if one exists (it may change the scheduler's
+        # choice); otherwise halt, leaving the unschedulable requests
+        # unfinished (QoE 0) rather than spinning. (Progress is detected
+        # from the work signals, not the clock — charge_scheduler_overhead
+        # advances `now` by wall time even in an idle iteration.)
+        if iter_extra == 0.0 and not decoders and not first_emits \
+                and not newly_preempted:
+            if self.pending:
+                self.now = max(self.now, self.pending[0].arrival)
+            else:
+                self.stuck = True            # a later submit() may clear it
+                return False
+        return True
+
+    # ----------------------------------------------------------------- result
+    def result(self) -> SimResult:
+        return SimResult(
+            requests=list(self.seen),
+            makespan=self.now,
+            total_tokens=self.total_tokens,
+            preemptions=self.preemptions,
+            iterations=self.iterations,
+            batch_sizes=self.batch_sizes,
+        )
 
     def run(self, workload: List[Request]) -> SimResult:
-        workload = sorted(workload, key=lambda r: r.arrival)
-        fluid = FluidQoE()
-        pending = list(workload)
-        live: List[Request] = []
-        now = 0.0
-        total_tokens = 0
-        preemptions = 0
-        iterations = 0
-        batch_sizes: List[int] = []
-        host_kv_used = 0
-        st_equiv = self.sched.cfg.state_equiv_tokens
-
-        def admit_arrivals(t):
-            nonlocal pending
-            while pending and pending[0].arrival <= t:
-                r = pending.pop(0)
-                r.fluid_idx = fluid.add(r.arrival, r.spec)
-                r.state = ReqState.WAITING
-                live.append(r)
-                self.sched.on_request_arrival(r)
-
-        while pending or live:
-            if not live:
-                now = max(now, pending[0].arrival)
-            admit_arrivals(now)
-            if not live:
-                continue
-            if now > self.cfg.max_sim_time:
-                break
-
-            running = [r for r in live if r.state == ReqState.RUNNING]
-            if self.cfg.charge_scheduler_overhead:
-                import time as _time
-                _t0 = _time.perf_counter()
-                target = self.sched.schedule(now, live, fluid)
-                now += _time.perf_counter() - _t0
-            else:
-                target = self.sched.schedule(now, live, fluid)
-            target_set = set(id(r) for r in target)
-
-            # ---- preemptions ------------------------------------------------
-            iter_extra = 0.0
-            newly_preempted = [r for r in running if id(r) not in target_set]
-            for r in newly_preempted:
-                r.preemptions += 1
-                preemptions += 1
-                ctx = r.context_len
-                if (self.cfg.preemption_mode == "swap"
-                        and host_kv_used + ctx <= self.cfg.host_kv_capacity_tokens):
-                    r.state = ReqState.SWAPPED
-                    host_kv_used += ctx
-                    iter_extra += self.lat.swap_latency(ctx)
-                else:
-                    # paper §4.2: fall back to recomputation when host RAM full
-                    r.state = ReqState.WAITING
-                    r.prefilled = False
-            self.sched.record_preemptions(len(newly_preempted))
-
-            # ---- admissions -------------------------------------------------
-            first_emits: List[Request] = []
-            for r in target:
-                if r.state == ReqState.SWAPPED:
-                    host_kv_used -= r.context_len
-                    iter_extra += self.lat.swap_latency(r.context_len)
-                    r.state = ReqState.RUNNING
-                elif r.state == ReqState.WAITING:
-                    # prefill (recompute includes generated prefix)
-                    iter_extra += self.lat.prefill_latency(r.context_len)
-                    r.state = ReqState.RUNNING
-                    r.prefilled = True
-                    if r.generated == 0:
-                        first_emits.append(r)
-
-            running = [r for r in live if r.state == ReqState.RUNNING]
-            batch_sizes.append(len(running))
-
-            # first tokens come out of prefill itself
-            prefill_done = now + iter_extra
-            for r in first_emits:
-                r.emit_times.append(prefill_done)
-                fluid.emit(r.fluid_idx, prefill_done, 1)
-                r.generated = 1
-                total_tokens += 1
-
-            # ---- decode iteration -------------------------------------------
-            decoders = [r for r in running if r.generated < r.output_len]
-            total_ctx = sum(r.context_len for r in decoders)
-            step = self.lat.iter_latency(len(decoders), total_ctx)
-            now = prefill_done + (step if decoders else 0.0)
-            iterations += 1
-
-            emit_idx = []
-            for r in decoders:
-                r.emit_times.append(now)
-                r.generated += 1
-                total_tokens += 1
-                emit_idx.append(r.fluid_idx)
-            if emit_idx:
-                fluid.emit(np.array(emit_idx), now, 1)
-
-            # ---- completions -------------------------------------------------
-            for r in running:
-                if r.generated >= r.output_len:
-                    r.state = ReqState.FINISHED
-                    r.finish_time = now
-                    self.sched.on_request_finish(r)
-            live = [r for r in live if r.is_live]
-            admit_arrivals(now)
-
-        return SimResult(
-            requests=workload,
-            makespan=now,
-            total_tokens=total_tokens,
-            preemptions=preemptions,
-            iterations=iterations,
-            batch_sizes=batch_sizes,
-        )
+        self.reset()
+        for r in sorted(workload, key=lambda r: r.arrival):
+            self.submit(r)
+        while self.step():
+            pass
+        return self.result()

@@ -1,4 +1,9 @@
 from repro.workload.arrivals import gamma_arrivals, poisson_arrivals
+from repro.workload.multitenant import (
+    DEFAULT_TENANTS,
+    TenantSpec,
+    make_multitenant_workload,
+)
 from repro.workload.qoe_traces import reading_qoe_trace, voice_qoe_trace
 from repro.workload.sharegpt import make_workload, sample_lengths
 
@@ -9,4 +14,7 @@ __all__ = [
     "voice_qoe_trace",
     "sample_lengths",
     "make_workload",
+    "TenantSpec",
+    "DEFAULT_TENANTS",
+    "make_multitenant_workload",
 ]

@@ -1,0 +1,108 @@
+"""Multi-tenant arrival traces with per-tenant QoE specs (cluster layer).
+
+The paper's traces (Tables 1–2) draw every request's QoE spec from one
+user-demographic mix. A fleet serves *tenants* — products with distinct
+QoE contracts and traffic shapes: an interactive chat app (stringent TTFT,
+reading-speed TDS), a voice assistant (speaking-speed TDS), a background
+summarization API (lenient on both). Skewed tenant mixes are exactly the
+scenario where QoE-aware routing and admission (repro.cluster, extending
+paper §6.4 surge handling fleet-wide) diverge from load-only policies, so
+the generator tags each Request with its tenant id for per-tenant
+accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.qoe import QoESpec
+from repro.serving.request import Request
+from repro.workload.arrivals import gamma_arrivals, poisson_arrivals
+from repro.workload.qoe_traces import EXPECTED_TTFT, reading_qoe_trace, voice_qoe_trace
+from repro.workload.sharegpt import sample_lengths
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """One tenant's traffic contract."""
+    name: str
+    share: float                 # fraction of total request volume
+    qoe: str = "reading"         # "reading" | "voice" | "fixed"
+    ttft: float = EXPECTED_TTFT  # expected TTFT (s); also the fixed-mode TTFT
+    tds: float = 4.8             # fixed-mode expected TDS (tokens/s)
+    dataset: str = "sharegpt"    # length distribution ("sharegpt"|"multiround")
+
+
+# A plausible production mix: latency-stringent chat dominates, a voice
+# product needs slower-but-steady delivery, and a batch API tolerates long
+# TTFT and a trickle TDS (it reads the whole answer at the end).
+DEFAULT_TENANTS = (
+    TenantSpec("chat", share=0.6, qoe="reading", ttft=1.0),
+    TenantSpec("voice", share=0.25, qoe="voice", ttft=1.5),
+    TenantSpec("batch_api", share=0.15, qoe="fixed", ttft=10.0, tds=1.5,
+               dataset="multiround"),
+)
+
+
+def _tenant_specs(t: TenantSpec, n: int, rng: np.random.Generator) -> List[QoESpec]:
+    if t.qoe == "reading":
+        return reading_qoe_trace(n, rng, ttft=t.ttft)
+    if t.qoe == "voice":
+        return voice_qoe_trace(n, rng, ttft=t.ttft)
+    if t.qoe == "fixed":
+        return [QoESpec(ttft=t.ttft, tds=t.tds)] * n
+    raise ValueError(t.qoe)
+
+
+def make_multitenant_workload(
+    n: int,
+    rate: float,
+    *,
+    tenants: Optional[Sequence[TenantSpec]] = None,
+    seed: int = 0,
+    arrival: str = "gamma",
+    cv: float = 3.0,
+) -> List[Request]:
+    """n requests at aggregate `rate` req/s, tenant drawn per-request from
+    the share mix; lengths and QoE specs follow each request's tenant."""
+    tenants = list(tenants if tenants is not None else DEFAULT_TENANTS)
+    rng = np.random.default_rng(seed)
+    shares = np.array([t.share for t in tenants], np.float64)
+    shares = shares / shares.sum()
+    tenant_ids = rng.choice(len(tenants), size=n, p=shares)
+
+    if arrival == "poisson":
+        arrivals = poisson_arrivals(rate, n, rng)
+    elif arrival == "gamma":
+        arrivals = gamma_arrivals(rate, n, rng, cv=cv)
+    else:
+        raise ValueError(arrival)
+
+    # draw lengths/specs per tenant (each from that tenant's distribution),
+    # then scatter back into arrival order
+    prompt = np.zeros(n, np.int64)
+    out = np.zeros(n, np.int64)
+    specs: List[Optional[QoESpec]] = [None] * n
+    for tid, t in enumerate(tenants):
+        idx = np.nonzero(tenant_ids == tid)[0]
+        if idx.size == 0:
+            continue
+        p, o = sample_lengths(idx.size, rng, t.dataset)
+        prompt[idx], out[idx] = p, o
+        for j, s in zip(idx, _tenant_specs(t, idx.size, rng)):
+            specs[j] = s
+
+    return [
+        Request(
+            rid=i,
+            arrival=float(arrivals[i]),
+            prompt_len=int(prompt[i]),
+            output_len=int(out[i]),
+            spec=specs[i],
+            tenant=int(tenant_ids[i]),
+        )
+        for i in range(n)
+    ]
+

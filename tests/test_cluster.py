@@ -1,0 +1,413 @@
+"""Cluster layer: router policies, admission control, autoscaling, and the
+1-replica bit-for-bit invariance with the single-node simulator."""
+import copy
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (
+    A40_4X,
+    A100_4X,
+    LatencyModel,
+    QoESpec,
+    SchedulerConfig,
+    fleet_avg_qoe,
+    fleet_min_qoe,
+    fleet_slo_attainment,
+    make_scheduler,
+    predict_request_qoe,
+)
+from repro.core.request import Request
+from repro.cluster import (
+    AdmissionConfig,
+    AutoscalerConfig,
+    ClusterConfig,
+    ClusterSimulator,
+    JSQRouter,
+    QoEAwareRouter,
+    Replica,
+    RoundRobinRouter,
+    marginal_qoe_gain,
+)
+from repro.cluster.router import (
+    RouterConfig,
+    capability,
+    normalized_queue,
+    shared_token_rate,
+)
+from repro.serving.simulator import ServingSimulator, SimConfig
+from repro.workload import (
+    DEFAULT_TENANTS,
+    make_multitenant_workload,
+    make_workload,
+)
+
+CFG = get_config("opt-66b")
+LAT = LatencyModel(CFG, A100_4X)
+LAT_SLOW = LatencyModel(CFG, A40_4X)
+M = 65_000
+
+
+def make_replica(rid, lat=LAT, kv=M, scheduler="andes"):
+    sched = make_scheduler(scheduler, kv, lat, SchedulerConfig())
+    sim = ServingSimulator(sched, lat, SimConfig(kv_capacity_tokens=kv))
+    return Replica(rid, sim, lat)
+
+
+def req(rid, arrival=0.0, prompt=200, out=200, tds=4.8, ttft=1.0, tenant=0):
+    return Request(rid=rid, arrival=arrival, prompt_len=prompt,
+                   output_len=out, spec=QoESpec(ttft=ttft, tds=tds),
+                   tenant=tenant)
+
+
+# ---------------------------------------------------------------------------
+# 1-replica invariance: the cluster layer must not perturb the engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheduler", ["andes", "fcfs"])
+@pytest.mark.parametrize("router", ["round_robin", "qoe"])
+def test_one_replica_cluster_matches_single_node(scheduler, router):
+    wl = make_workload(120, 3.0, seed=7, arrival="gamma")
+    single = ServingSimulator(
+        make_scheduler(scheduler, M, LAT, SchedulerConfig()), LAT,
+        SimConfig(kv_capacity_tokens=M),
+    ).run(copy.deepcopy(wl))
+    cluster = ClusterSimulator(LAT, ClusterConfig(
+        n_replicas=1, router=router, scheduler=scheduler,
+        kv_capacity_tokens=M,
+    )).run(copy.deepcopy(wl))
+
+    assert len(cluster.shed) == 0
+    s = {r.rid: r for r in single.requests}
+    c = {r.rid: r for r in cluster.admitted}
+    assert set(s) == set(c)
+    for rid in s:
+        # bit-for-bit: identical token emission timelines
+        assert s[rid].emit_times == c[rid].emit_times
+        assert s[rid].preemptions == c[rid].preemptions
+
+
+# ---------------------------------------------------------------------------
+# Router units
+# ---------------------------------------------------------------------------
+
+def test_round_robin_cycles():
+    reps = [make_replica(i) for i in range(3)]
+    router = RoundRobinRouter()
+    picks = [router.route(req(i), reps, 0.0).replica.id for i in range(6)]
+    assert picks == [0, 1, 2, 0, 1, 2]
+
+
+def test_jsq_ties_break_to_lowest_id():
+    reps = [make_replica(i) for i in range(3)]
+    assert JSQRouter().route(req(0), reps, 0.0).replica.id == 0
+
+
+def test_jsq_prefers_shortest_committed_queue():
+    reps = [make_replica(i) for i in range(2)]
+    reps[0].submit(req(0))
+    assert JSQRouter().route(req(1), reps, 0.0).replica.id == 1
+
+
+def test_qoe_router_ties_break_to_lowest_id():
+    reps = [make_replica(i) for i in range(3)]
+    assert QoEAwareRouter().route(req(0), reps, 0.0).replica.id == 0
+
+
+def test_qoe_router_memory_aware_placement():
+    """A KV-overcommitted replica loses decisively to an idle one."""
+    reps = [make_replica(0, kv=8_000), make_replica(1, kv=8_000)]
+    for i in range(40):                     # ~32k prompt tokens >> 8k KV
+        reps[0].submit(req(i, prompt=800))
+    decision = QoEAwareRouter().route(req(99), reps, 0.0)
+    assert decision.replica.id == 1
+    assert decision.scores[0] < decision.scores[1]
+
+
+def test_qoe_router_capability_aware_on_heterogeneous_fleet():
+    """Equal queue depth, unequal hardware: route to the faster replica.
+    Count-based JSQ cannot distinguish these."""
+    fast, slow = make_replica(0, lat=LAT), make_replica(1, lat=LAT_SLOW)
+    assert capability(fast) > capability(slow)
+    for i in range(6):
+        fast.submit(req(i))
+        slow.submit(req(10 + i))
+    assert normalized_queue(slow) > normalized_queue(fast)
+    assert QoEAwareRouter().route(req(99), [fast, slow], 0.0).replica.id == 0
+    # JSQ sees identical queues and just takes the lowest id
+    assert JSQRouter().route(req(99), [fast, slow], 0.0).replica.id == 0
+
+
+def test_marginal_gain_idle_vs_saturated():
+    idle = make_replica(0, kv=8_000)
+    full = make_replica(1, kv=8_000)
+    for i in range(60):
+        full.submit(req(i, prompt=800))
+    cfg = RouterConfig()
+    g_idle = marginal_qoe_gain(idle, req(99), 0.0, cfg)
+    g_full = marginal_qoe_gain(full, req(99), 0.0, cfg)
+    assert g_idle == pytest.approx(1.0, abs=0.05)
+    assert g_full < g_idle - 0.5
+
+
+def test_shared_token_rate_memory_cap():
+    # doubling live requests beyond the memory cap halves the shared rate
+    r_fit = shared_token_rate(LAT, 10, 10 * 400, kv_capacity=100_000)
+    r_over = shared_token_rate(LAT, 100, 100 * 400, kv_capacity=10_000)
+    assert r_over < r_fit
+    # idle
+    assert shared_token_rate(LAT, 0, 0, 10_000) == 0.0
+
+
+def test_router_does_not_mutate_replica_fluid_state():
+    rep = make_replica(0)
+    rep.submit(req(0))
+    for _ in range(5):
+        rep.step()
+    before = {f: getattr(rep.fluid, f).copy() for f in rep.fluid.FIELDS}
+    QoEAwareRouter().route(req(1, arrival=rep.clock), [rep], rep.clock)
+    for f, arr in before.items():
+        np.testing.assert_array_equal(arr, getattr(rep.fluid, f))
+
+
+# ---------------------------------------------------------------------------
+# Admission control under gamma bursts
+# ---------------------------------------------------------------------------
+
+def surge_cluster(policy, n=200, rate=18.0, seed=2):
+    cfg = ClusterConfig(
+        n_replicas=2, router="qoe", kv_capacity_tokens=10_000,
+        admission=AdmissionConfig(policy=policy),
+    )
+    wl = make_workload(n, rate, seed=seed, arrival="gamma", cv=3.0)
+    return ClusterSimulator(LAT, cfg).run(wl)
+
+
+def test_admission_none_admits_everything():
+    res = surge_cluster("none")
+    assert len(res.shed) == 0 and res.n_defer_events == 0
+    assert len(res.admitted) == 200
+
+
+def test_admission_shed_protects_served_qoe():
+    base = surge_cluster("none")
+    shed = surge_cluster("shed")
+    assert len(shed.shed) > 0
+    assert shed.shed_rate() < 0.5                  # degrade, don't collapse
+    assert (shed.avg_qoe(include_shed=False)
+            > base.avg_qoe(include_shed=False) + 0.02)
+    # shed requests never received a token and count as QoE 0
+    assert all(not r.emit_times for r in shed.shed)
+    assert shed.avg_qoe() < shed.avg_qoe(include_shed=False)
+
+
+def test_admission_defer_retries_before_shedding():
+    shed = surge_cluster("shed")
+    defer = surge_cluster("defer")
+    assert defer.n_defer_events > 0
+    # retrying lets some deferred requests land instead of being dropped
+    assert len(defer.shed) <= len(shed.shed)
+    # every admitted request still completes
+    assert all(r.generated >= r.output_len for r in defer.admitted)
+
+
+def test_underload_admits_everything_regardless_of_policy():
+    cfg = ClusterConfig(
+        n_replicas=2, router="qoe", kv_capacity_tokens=M,
+        admission=AdmissionConfig(policy="shed"),
+    )
+    wl = make_workload(60, 0.5, seed=1, arrival="gamma", cv=3.0)
+    res = ClusterSimulator(LAT, cfg).run(wl)
+    assert len(res.shed) == 0
+    assert res.avg_qoe() > 0.97
+
+
+# ---------------------------------------------------------------------------
+# Autoscaler
+# ---------------------------------------------------------------------------
+
+def test_autoscaler_scales_up_under_surge_and_drains_back():
+    cfg = ClusterConfig(
+        n_replicas=1, router="qoe", kv_capacity_tokens=15_000,
+        autoscaler=AutoscalerConfig(
+            min_replicas=1, max_replicas=4,
+            provision_delay=5.0, cooldown=10.0, window=15.0,
+        ),
+    )
+    wl = make_workload(200, 8.0, seed=2, arrival="gamma", cv=3.0)
+    res = ClusterSimulator(LAT, cfg).run(wl)
+    assert res.peak_replicas > 1
+    assert any(e.action == "scale_up" for e in res.scale_events)
+    # drained replicas finished their in-flight work: nothing lost
+    assert all(r.generated >= r.output_len for r in res.admitted)
+    total = sum(len(rr.requests) for rr in res.replica_results.values())
+    assert total == len(res.admitted)
+
+
+def test_autoscaler_respects_max_replicas():
+    cap = AutoscalerConfig(min_replicas=1, max_replicas=2,
+                           provision_delay=1.0, cooldown=2.0, window=10.0)
+    cfg = ClusterConfig(n_replicas=1, router="qoe", kv_capacity_tokens=8_000,
+                        autoscaler=cap)
+    wl = make_workload(150, 12.0, seed=3, arrival="gamma", cv=3.0)
+    res = ClusterSimulator(LAT, cfg).run(wl)
+    assert res.peak_replicas <= 2
+
+
+def test_fixed_fleet_has_no_scale_events():
+    cfg = ClusterConfig(n_replicas=2, router="jsq", kv_capacity_tokens=M)
+    res = ClusterSimulator(LAT, cfg).run(make_workload(50, 2.0, seed=1))
+    assert res.scale_events == []
+    assert res.peak_replicas == 2
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant workload + fleet aggregation
+# ---------------------------------------------------------------------------
+
+def test_multitenant_workload_shapes():
+    wl = make_multitenant_workload(300, 5.0, seed=0)
+    assert len(wl) == 300
+    tenants = {r.tenant for r in wl}
+    assert tenants == set(range(len(DEFAULT_TENANTS)))
+    # dominant tenant has the largest share
+    counts = np.bincount([r.tenant for r in wl])
+    assert int(np.argmax(counts)) == 0
+    # batch tenant got its lenient fixed spec
+    batch = [r for r in wl if r.tenant == 2]
+    assert all(r.spec.ttft == DEFAULT_TENANTS[2].ttft for r in batch)
+    arrivals = [r.arrival for r in wl]
+    assert arrivals == sorted(arrivals)
+
+
+def test_per_tenant_reporting():
+    cfg = ClusterConfig(n_replicas=2, router="qoe", kv_capacity_tokens=M)
+    res = ClusterSimulator(LAT, cfg).run(
+        make_multitenant_workload(120, 3.0, seed=1))
+    per = res.per_tenant_avg_qoe()
+    assert set(per) <= set(range(len(DEFAULT_TENANTS)))
+    assert all(0.0 <= v <= 1.0 for v in per.values())
+
+
+def test_fleet_aggregation_helpers():
+    a, b = np.array([1.0, 0.8]), np.array([0.6])
+    assert fleet_avg_qoe([a, b]) == pytest.approx(0.8)
+    assert fleet_min_qoe([a, b]) == pytest.approx(0.6)
+    assert fleet_slo_attainment([a, b], threshold=0.7) == pytest.approx(2 / 3)
+    # shed requests count as zeros
+    assert fleet_avg_qoe([a, b], n_shed=1) == pytest.approx(0.6)
+    assert fleet_min_qoe([a, b], n_shed=1) == 0.0
+    assert fleet_avg_qoe([]) == 1.0
+
+
+def test_predict_request_qoe_monotone_in_delay():
+    spec = QoESpec(ttft=1.0, tds=4.8)
+    qs = [predict_request_qoe(spec, d, rate=10.0, dt=30.0, exp_len=200)
+          for d in (0.0, 2.0, 5.0, 15.0, 30.0)]
+    assert qs[0] == pytest.approx(1.0, abs=1e-6)
+    assert all(x >= y - 1e-9 for x, y in zip(qs, qs[1:]))
+    assert qs[-1] == 0.0
+
+
+@pytest.mark.parametrize("charge_overhead", [False, True])
+def test_unschedulable_request_halts_instead_of_hanging(charge_overhead):
+    """A prompt larger than KV capacity can never be scheduled; the
+    simulator must halt (request unfinished, QoE 0), not spin forever —
+    the cluster drain loop runs `while rep.step()`. With
+    charge_scheduler_overhead the clock creeps by wall time each
+    iteration, so the guard must key on work signals, not the clock."""
+    kv = 1_000
+    sched = make_scheduler("andes", kv, LAT, SchedulerConfig())
+    sim = ServingSimulator(sched, LAT, SimConfig(
+        kv_capacity_tokens=kv, charge_scheduler_overhead=charge_overhead))
+    rep = Replica(0, sim, LAT)
+    rep.submit(req(0, prompt=2_000, out=50))
+    rep.submit(req(1, arrival=0.1, prompt=200, out=20))
+    steps = 0
+    while rep.step():
+        steps += 1
+        assert steps < 10_000, "simulator failed to terminate"
+    res = rep.result()
+    by_rid = {r.rid: r for r in res.requests}
+    assert by_rid[1].generated >= 20          # schedulable one completes
+    assert by_rid[0].generated == 0           # impossible one gives up
+    assert by_rid[0].final_qoe() == 0.0
+
+
+def test_submit_after_deadlock_resumes_service():
+    """A deadlock halt is transient: a later (schedulable) submit must
+    un-stick the simulator — one oversized prompt must not blackhole the
+    replica for every future request the router places on it."""
+    rep = make_replica(0, kv=1_000)
+    rep.submit(req(0, prompt=2_000, out=50))
+    while rep.step():
+        pass
+    assert rep.backend.stuck
+    rep.submit(req(1, arrival=rep.clock + 1.0, prompt=200, out=20))
+    while rep.step():
+        pass
+    by_rid = {r.rid: r for r in rep.result().requests}
+    assert by_rid[1].generated >= 20
+
+
+def test_fleet_scaled_to_zero_recovers_on_arrival():
+    """min_replicas=0 can drain the whole fleet during a lull; the next
+    arrival must provision a replica, not crash."""
+    cfg = ClusterConfig(
+        n_replicas=1, router="qoe", kv_capacity_tokens=M,
+        autoscaler=AutoscalerConfig(
+            min_replicas=0, max_replicas=2,
+            provision_delay=1.0, cooldown=5.0, window=10.0,
+        ),
+    )
+    wl = make_workload(20, 2.0, seed=1)
+    late = make_workload(5, 2.0, seed=2)
+    for r in late:
+        r.rid += 100
+        r.arrival += 500.0        # long lull: fleet drains to zero
+    res = ClusterSimulator(LAT, cfg).run(wl + late)
+    assert len(res.admitted) == 25
+    assert all(r.generated >= r.output_len for r in res.admitted)
+
+
+def test_deferred_request_scored_with_aged_qoe_clock():
+    """marginal_qoe_gain must not re-score an old (deferred) request as
+    fresh: dead time on the QoE clock lowers achievable QoE."""
+    rep = make_replica(0)
+    cfg = RouterConfig()
+    fresh = marginal_qoe_gain(rep, req(0, arrival=0.0), 0.0, cfg)
+    aged = marginal_qoe_gain(rep, req(1, arrival=0.0), 10.0, cfg)
+    assert aged < fresh - 0.1
+
+
+def test_autoscaler_pending_provisions_cancelled_after_drain():
+    """A provision still in flight when the trace ends must not material-
+    ize a phantom replica that never serves anything."""
+    cfg = ClusterConfig(
+        n_replicas=1, router="qoe", kv_capacity_tokens=15_000,
+        autoscaler=AutoscalerConfig(
+            min_replicas=1, max_replicas=8,
+            provision_delay=10_000.0,      # never ready during the trace
+            cooldown=5.0, window=10.0,
+        ),
+    )
+    wl = make_workload(100, 8.0, seed=2, arrival="gamma", cv=3.0)
+    res = ClusterSimulator(LAT, cfg).run(wl)
+    assert res.peak_replicas == 1
+    assert all(rr.requests for rr in res.replica_results.values())
+
+
+def test_cluster_config_rejects_empty_fleet():
+    with pytest.raises(ValueError):
+        ClusterSimulator(LAT, ClusterConfig(n_replicas=0))
+    with pytest.raises(ValueError):
+        ClusterSimulator([], ClusterConfig(n_replicas=1))
+
+
+def test_draining_replica_rejects_submissions():
+    rep = make_replica(0)
+    rep.drain()
+    with pytest.raises(RuntimeError):
+        rep.submit(req(0))
+    assert rep.drained        # no work -> immediately drained

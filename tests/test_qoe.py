@@ -1,8 +1,7 @@
 """QoE metric (paper §3.1, Eq. 1): unit + property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st  # hypothesis or fallback
 
 from repro.core.qoe import (
     FluidQoE,

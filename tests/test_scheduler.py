@@ -1,8 +1,7 @@
 """Scheduler unit tests: Algorithm 1 greedy, Algorithm 2 DP, invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st  # hypothesis or fallback
 
 from repro.configs import get_config
 from repro.core import (

@@ -1,8 +1,7 @@
 """Workload generation (§6.1): arrivals, lengths, QoE traces."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st  # hypothesis or fallback
 
 from repro.workload import (
     gamma_arrivals,
