@@ -107,8 +107,85 @@ def _admission_sweep(quick: bool):
     return rows
 
 
+def _engine_sweep(quick: bool):
+    """Engine-backed mode: the same cluster layer, but every replica runs
+    the real JAX model (granite-class smoke config, virtual clock) through
+    the steppable ServingEngine. Reported next to a simulator-backed fleet
+    with identical scheduler/router/capacity on the identical trace — the
+    fleet-level engine-as-oracle check, as a benchmark row instead of a
+    test assertion."""
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.core import TPU_V5E
+    from repro.core.qoe import QoESpec
+    from repro.core.request import Request
+    from repro.cluster import engine_backend
+    from repro.models import Model
+    from repro.workload.arrivals import gamma_arrivals
+
+    cfg = get_smoke_config("granite-3-2b")
+    model_obj = Model(cfg)
+    params = model_obj.init(jax.random.PRNGKey(0))
+    lat = LatencyModel(cfg, TPU_V5E)
+    # tight per-replica KV budget so the sweep exercises queueing and
+    # preemption, not just an idle fleet
+    num_slots, max_seq = 4, 64
+    cap = 150
+
+    n = 24 if quick else 60
+    rng = np.random.default_rng(3)
+    arrivals = gamma_arrivals(12.0, n, rng, cv=3.0)
+    wl_proto = [
+        Request(rid=i, arrival=float(arrivals[i]),
+                prompt_len=int(rng.integers(8, 32)),
+                output_len=int(rng.integers(8, 24)),
+                spec=QoESpec(ttft=1.0, tds=4.8))
+        for i in range(n)
+    ]
+
+    def clone():
+        return [r.clone() for r in wl_proto]
+
+    rows = []
+    for router in ("round_robin", "qoe"):
+        common = dict(n_replicas=2, router=router,
+                      kv_capacity_tokens=cap)
+        res_sim = ClusterSimulator(lat, ClusterConfig(**common)).run(clone())
+        res_eng = ClusterSimulator(lat, ClusterConfig(
+            **common,
+            backend_factory=engine_backend(
+                model_obj, params, num_slots=num_slots, max_seq=max_seq,
+                capacity_tokens=cap),
+        )).run(clone())
+        qoe_sim = {r.rid: r.final_qoe() for r in res_sim.admitted}
+        qoe_eng = {r.rid: r.final_qoe() for r in res_eng.admitted}
+        ttft_sim = {r.rid: r.final_ttft() for r in res_sim.admitted}
+        ttft_eng = {r.rid: r.final_ttft() for r in res_eng.admitted}
+        max_dq = max(abs(qoe_sim[rid] - qoe_eng[rid]) for rid in qoe_sim)
+        max_dt = max(abs(ttft_sim[rid] - ttft_eng[rid]) for rid in ttft_sim)
+        rows.append({
+            "name": f"cluster/engine/{router}",
+            "avg_qoe_engine": round(res_eng.avg_qoe(), 4),
+            "avg_qoe_sim": round(res_sim.avg_qoe(), 4),
+            "max_per_request_qoe_delta": round(max_dq, 4),
+            "mean_ttft_engine": round(float(res_eng.ttfts().mean()), 4),
+            "max_per_request_ttft_delta": round(max_dt, 4),
+            "tokens_engine": res_eng.total_tokens(),
+            "preemptions_engine": res_eng.preemptions(),
+        })
+    return rows
+
+
 def run(quick: bool = False):
     return _router_sweep(quick) + _admission_sweep(quick)
+
+
+def run_engine(quick: bool = False):
+    """Standalone engine-backed mode (python -m benchmarks.cluster_qoe
+    --engine). Not part of the default sweep: it initializes a real model
+    and is meant as the fleet-level oracle check, not a paper figure."""
+    return _engine_sweep(quick)
 
 
 def validate(rows) -> str:
@@ -137,11 +214,26 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--out", default=None, help="write rows as JSON here")
+    ap.add_argument("--engine", action="store_true",
+                    help="engine-backed mode: real-model replicas "
+                         "(granite smoke config) vs the simulator fleet")
     args = ap.parse_args()
-    rows = run(quick=not args.full)
-    for r in rows:
-        print(r)
-    print(validate(rows))
+    if args.engine:
+        rows = run_engine(quick=not args.full)
+        for r in rows:
+            print(r)
+        dq = [r["max_per_request_qoe_delta"] for r in rows]
+        dt = [r["max_per_request_ttft_delta"] for r in rows]
+        verdict = ("OK" if all(d < 0.15 for d in dq)
+                   and all(d < 0.1 for d in dt) else "MISMATCH")
+        print(f"{verdict}: sim-vs-engine fleet agreement, max per-request "
+              f"QoE delta {max(dq):.3f} (< 0.15), "
+              f"TTFT delta {max(dt):.3f}s (< 0.1)")
+    else:
+        rows = run(quick=not args.full)
+        for r in rows:
+            print(r)
+        print(validate(rows))
     if args.out:
         with open(args.out, "w") as f:
             json.dump(rows, f, indent=2)

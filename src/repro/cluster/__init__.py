@@ -3,9 +3,13 @@
 The paper (§4–§6) maximizes QoE *within one* continuous-batching engine;
 this package adds the fleet layer a production deployment needs on top:
 
-  replica.py      Replica — one engine behind submit/step/drain (wraps the
-                  discrete-event ServingSimulator; any SteppableBackend,
-                  e.g. a stepped real Engine, plugs in).
+  replica.py      Replica — one engine behind submit/step/drain (any
+                  SteppableBackend: the discrete-event ServingSimulator
+                  or the stepped real ServingEngine).
+  backends.py     Backend factories — simulator_backend (default),
+                  engine_backend (real JAX model per replica, shared
+                  weights), mixed_backends (sim + engine in one fleet);
+                  selected via ClusterConfig.backend_factory.
   router.py       Round-robin, join-shortest-queue, and a QoE-aware policy
                   that places each request where its predicted marginal
                   fleet QoE gain — priced with the replica's FluidQoE +
@@ -21,6 +25,12 @@ A 1-replica cluster reproduces the single-node simulator bit-for-bit.
 """
 from repro.cluster.admission import AdmissionConfig, AdmissionController
 from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig, ScaleEvent
+from repro.cluster.backends import (
+    BackendFactory,
+    engine_backend,
+    mixed_backends,
+    simulator_backend,
+)
 from repro.cluster.cluster_sim import ClusterConfig, ClusterResult, ClusterSimulator
 from repro.cluster.replica import Replica, SteppableBackend
 from repro.cluster.router import (
@@ -37,6 +47,8 @@ from repro.cluster.router import (
 
 __all__ = [
     "Replica", "SteppableBackend",
+    "BackendFactory", "simulator_backend", "engine_backend",
+    "mixed_backends",
     "Router", "RouterConfig", "RouteDecision", "RoundRobinRouter",
     "JSQRouter", "QoEAwareRouter", "ROUTERS", "make_router",
     "marginal_qoe_gain",

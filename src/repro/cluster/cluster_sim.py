@@ -30,6 +30,7 @@ from repro.core.scheduler import SchedulerConfig, make_scheduler
 from repro.serving.simulator import ServingSimulator, SimConfig, SimResult
 from repro.cluster.admission import ADMIT, DEFER, AdmissionConfig, AdmissionController
 from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig, ScaleEvent
+from repro.cluster.backends import BackendFactory, simulator_backend
 from repro.cluster.replica import Replica
 from repro.cluster.router import RouterConfig, make_router
 
@@ -46,6 +47,10 @@ class ClusterConfig:
     router_cfg: Optional[RouterConfig] = None
     admission: Optional[AdmissionConfig] = None     # None -> admit all
     autoscaler: Optional[AutoscalerConfig] = None   # None -> fixed fleet
+    # what runs inside each replica: (rid, scheduler, lat, cfg) -> backend.
+    # None -> discrete-event simulator; see repro.cluster.backends for the
+    # real-engine and mixed-fleet factories.
+    backend_factory: Optional[BackendFactory] = None
 
 
 @dataclasses.dataclass
@@ -141,13 +146,10 @@ class ClusterSimulator:
             else SchedulerConfig()
         sched = make_scheduler(cfg.scheduler, cfg.kv_capacity_tokens,
                                lat, sched_cfg)
-        sim = ServingSimulator(sched, lat, SimConfig(
-            kv_capacity_tokens=cfg.kv_capacity_tokens,
-            preemption_mode=cfg.preemption_mode,
-            max_sim_time=cfg.max_sim_time,
-        ))
-        sim.now = launched_at        # replica is born at provision time
-        return Replica(rid, sim, lat, launched_at=launched_at)
+        factory = cfg.backend_factory or simulator_backend
+        backend = factory(rid, sched, lat, cfg)
+        backend.now = launched_at    # replica is born at provision time
+        return Replica(rid, backend, lat, launched_at=launched_at)
 
     def _advance_all(self, t: float) -> None:
         for rep in self.replicas:

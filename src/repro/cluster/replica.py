@@ -13,7 +13,7 @@ talks through this protocol.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Protocol
+from typing import List, Optional, Protocol, runtime_checkable
 
 from repro.core.latency_model import LatencyModel
 from repro.core.qoe import FluidQoE
@@ -22,8 +22,15 @@ from repro.core.scheduler import Scheduler
 from repro.serving.simulator import ServingSimulator, SimResult
 
 
+@runtime_checkable
 class SteppableBackend(Protocol):
-    """Minimal engine surface the cluster layer depends on."""
+    """Minimal engine surface the cluster layer depends on.
+
+    Satisfied structurally by both `ServingSimulator` (discrete-event) and
+    `ServingEngine` (real JAX model, virtual clock) — see
+    `repro.cluster.backends` for the factories that build either per
+    replica. runtime_checkable so tests can assert conformance with
+    isinstance (presence-of-members check)."""
     sched: Scheduler
     fluid: FluidQoE
     live: List[Request]

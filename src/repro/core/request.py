@@ -38,6 +38,17 @@ class Request:
     finish_time: float = float("nan")
     output_tokens: List[int] = dataclasses.field(default_factory=list)
 
+    def clone(self) -> "Request":
+        """A fresh, unserved copy: identity fields (rid/arrival/lengths/
+        spec/prompt/tenant) carried over, all lifecycle state reset.
+        This is what differential tests and the cluster layer use to run
+        the same workload through two backends."""
+        return Request(
+            rid=self.rid, arrival=self.arrival, prompt_len=self.prompt_len,
+            spec=self.spec, output_len=self.output_len,
+            prompt_tokens=self.prompt_tokens, tenant=self.tenant,
+        )
+
     # ---- knapsack weight (l_i) -------------------------------------------
     @property
     def context_len(self) -> int:

@@ -1,0 +1,13 @@
+"""JAX version compatibility for Pallas TPU symbols.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``
+across the 0.4.x → 0.5+ drift (and older wheels only ship one of the
+two names). Resolve whichever the installed version provides once, so
+every kernel call site works on both sides of the rename.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
+__all__ = ["CompilerParams"]

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 
 def _scan_kernel(
     x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, o_ref,
@@ -95,7 +97,7 @@ def selective_scan(
         ),
         out_shape=jax.ShapeDtypeStruct((bsz, s, d), x.dtype),
         scratch_shapes=[pltpu.VMEM((block_d, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

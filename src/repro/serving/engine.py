@@ -14,9 +14,20 @@ deterministic; ``clock="wall"`` uses wall time on real hardware.
 The engine also serves as the oracle for validating the simulator
 (tests/test_sim_vs_engine.py): same scheduler, same workload, same latency
 model ⇒ near-identical scheduling traces.
+
+Like the simulator, the engine is *steppable*: ``submit()`` enqueues
+arrivals, ``step()`` executes one continuous-batching iteration (schedule
+→ preempt → swap-in/prefill → one real decode), and ``result()``
+snapshots a SimResult. ``run()`` is a thin loop over ``step()`` that
+reproduces the pre-refactor batch loop bit-for-bit
+(tests/test_engine_steppable.py holds a transcription of the legacy loop
+as the differential oracle). This makes ServingEngine satisfy
+``repro.cluster.replica.SteppableBackend`` verbatim, so real-model
+replicas plug into the cluster layer unchanged.
 """
 from __future__ import annotations
 
+import bisect
 import functools
 import time
 from typing import Dict, List, Optional
@@ -31,6 +42,7 @@ from repro.core.scheduler import Scheduler
 from repro.models.model import Model
 from repro.serving.kv_manager import KVSlotManager
 from repro.serving.request import Request, ReqState
+from repro.serving.simulator import SimResult
 
 
 def _slot_axis(leaf_ndim: int) -> int:
@@ -57,6 +69,19 @@ def _read_slot(cache, slot):
 
 
 class ServingEngine:
+    """Real continuous-batching engine over a jitted JAX model.
+
+    Incremental API (used by the cluster layer's `Replica`, identical to
+    ServingSimulator's):
+      submit(req)  enqueue an arrival (any time, in any order)
+      step()       one scheduling+decode iteration; False when out of work
+      has_work     pending or live requests remain
+      result()     SimResult over every request ever submitted
+
+    Batch API (classic single-node experiments):
+      run(workload)  submit all + step to completion
+    """
+
     def __init__(
         self,
         model: Model,
@@ -76,24 +101,50 @@ class ServingEngine:
         self.params = params
         self.sched = scheduler
         self.lat = lat
-        self.kv = KVSlotManager(num_slots, max_seq, capacity_tokens)
         self.preemption_mode = preemption_mode
         self.clock = clock
         self.eos_id = eos_id
         self.max_seq = max_seq
+        self._num_slots = num_slots
+        self._capacity_tokens = capacity_tokens
 
         enc_seq = max_seq // 4 if model.cfg.kind in ("encdec", "audio") else 0
         self.cache = model.init_cache(
             num_slots, max_seq, enc_seq=enc_seq, dtype=cache_dtype
         )
         self._decode = jax.jit(model.decode_step)
+        self.reset()
+
+    # ------------------------------------------------------------------ state
+    def reset(self) -> None:
+        """Clear all serving state (the device cache pytree is reused; live
+        slots are always re-written at prefill/swap-in time)."""
+        self.kv = KVSlotManager(self._num_slots, self.max_seq,
+                                self._capacity_tokens)
         self.fluid = FluidQoE()
         self.now = 0.0
         self.slot_req: Dict[int, Request] = {}
         self.preemptions = 0
         self.total_tokens = 0
         self.iterations = 0
+        self.batch_sizes: List[int] = []
+        self.pending: List[Request] = []     # submitted, not yet admitted
+        self.live: List[Request] = []
+        self.seen: List[Request] = []        # submit order
+        self.stuck = False                   # deadlocked (cleared by submit)
         self._wall0 = time.monotonic()
+
+    def submit(self, req: Request) -> None:
+        """Enqueue an arrival. Stable insert keeps equal-arrival order."""
+        bisect.insort(self.pending, req, key=lambda r: r.arrival)
+        self.seen.append(req)
+        # a new arrival may change the scheduler's choice even if the
+        # current live set deadlocked — try again
+        self.stuck = False
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.pending or self.live)
 
     # ---------------------------------------------------------------- clock
     def _tick(self, seconds: float) -> None:
@@ -105,6 +156,14 @@ class ServingEngine:
     # -------------------------------------------------------------- prefill
     def _prefill_request(self, r: Request) -> None:
         """Run the prompt (plus any generated prefix on recompute)."""
+        if r.prompt_tokens is None:
+            # simulator-style request (length only, no token ids) — e.g.
+            # routed by the cluster layer from a synthetic trace. Derive a
+            # deterministic prompt from the rid so reruns are reproducible.
+            rng = np.random.default_rng(r.rid)
+            r.prompt_tokens = rng.integers(
+                0, self.model.cfg.vocab_size, r.prompt_len
+            ).astype(np.int32)
         toks = np.concatenate([
             np.asarray(r.prompt_tokens, np.int32),
             np.asarray(r.output_tokens[: r.generated], np.int32),
@@ -176,63 +235,111 @@ class ServingEngine:
         self._tick(self.lat.swap_latency(r.context_len))
 
     # ----------------------------------------------------------- main loop
+    def _admit_arrivals(self) -> None:
+        while self.pending and self.pending[0].arrival <= self.now:
+            r = self.pending.pop(0)
+            r.fluid_idx = self.fluid.add(r.arrival, r.spec)
+            r.state = ReqState.WAITING
+            self.live.append(r)
+            self.sched.on_request_arrival(r)
+
+    def step(self) -> bool:
+        """One continuous-batching iteration (schedule → preempt →
+        swap-in/prefill → one real decode over all occupied slots).
+        Returns False when there is nothing left to do."""
+        if self.stuck or not (self.pending or self.live):
+            return False
+        if not self.live and self.pending:
+            self.now = max(self.now, self.pending[0].arrival)
+        self._admit_arrivals()
+        if not self.live:
+            return True
+
+        target = self.sched.schedule(self.now, self.live, self.fluid)
+        target_ids = {id(r) for r in target}
+
+        n_preempted = 0
+        for r in list(self.slot_req.values()):
+            if id(r) not in target_ids and r.state == ReqState.RUNNING:
+                self._preempt(r)
+                n_preempted += 1
+        n_admitted = 0
+        for r in target:
+            if r.state == ReqState.SWAPPED and self.kv.can_allocate(r):
+                self._swap_in(r)
+                n_admitted += 1
+            elif r.state == ReqState.WAITING and self.kv.can_allocate(r):
+                r.state = ReqState.RUNNING
+                r.prefilled = True
+                self._prefill_request(r)
+                n_admitted += 1
+
+        # ---- one decode iteration over all occupied slots -------------
+        active = {s: r for s, r in self.slot_req.items()
+                  if r.state == ReqState.RUNNING}
+        self.batch_sizes.append(len(active))
+        if active:
+            lengths = np.zeros(self.kv.num_slots, np.int32)
+            tokens = np.zeros(self.kv.num_slots, np.int32)
+            for s, r in active.items():
+                lengths[s] = r.context_len
+                tokens[s] = r.output_tokens[-1] if r.output_tokens else 0
+            self.cache["length"] = jnp.asarray(lengths)
+            logits, self.cache = self._decode(
+                self.params, jnp.asarray(tokens), self.cache
+            )
+            total_ctx = int(lengths.sum())
+            self._tick(self.lat.iter_latency(len(active), total_ctx))
+            nxt = np.asarray(jnp.argmax(logits, axis=-1))
+            for s, r in list(active.items()):
+                self._emit(r, int(nxt[s]))
+        else:
+            self._tick(self.lat.hw.overhead)
+
+        self.iterations += 1
+        self.live = [r for r in self.live if r.is_live]
+        n_live = len(self.live)
+        self._admit_arrivals()
+        newly_arrived = len(self.live) > n_live
+
+        # ---- deadlock guard -------------------------------------------
+        # Nothing decoded, admitted, preempted, or newly arrived (the
+        # overhead tick can advance the clock past a pending arrival),
+        # and no future arrival can change the picture: every live
+        # request is permanently unschedulable (e.g. prompt larger than
+        # KV capacity). The legacy loop spun on overhead ticks until
+        # max_iterations; the steppable engine halts so unbounded drivers
+        # (cluster drain) terminate. With arrivals still pending the
+        # clock keeps advancing by the overhead tick exactly as the
+        # legacy loop did, preserving bit-for-bit admission times.
+        if not active and not n_admitted and not n_preempted \
+                and not newly_arrived and not self.pending:
+            self.stuck = True                # a later submit() may clear it
+            return False
+        return True
+
+    def result(self) -> SimResult:
+        return SimResult(
+            requests=list(self.seen),
+            makespan=self.now,
+            total_tokens=self.total_tokens,
+            preemptions=self.preemptions,
+            iterations=self.iterations,
+            batch_sizes=self.batch_sizes,
+        )
+
     def run(self, workload: List[Request], max_iterations: int = 100_000):
-        """Serve the workload to completion. Returns the finished requests."""
-        pending = sorted(workload, key=lambda r: r.arrival)
-        live: List[Request] = []
+        """Serve the workload to completion. Returns the finished requests.
 
-        def admit_arrivals():
-            while pending and pending[0].arrival <= self.now:
-                r = pending.pop(0)
-                r.fluid_idx = self.fluid.add(r.arrival, r.spec)
-                r.state = ReqState.WAITING
-                live.append(r)
-                self.sched.on_request_arrival(r)
-
-        while (pending or live) and self.iterations < max_iterations:
-            if not live and pending:
-                self.now = max(self.now, pending[0].arrival)
-            admit_arrivals()
-            if not live:
-                continue
-
-            target = self.sched.schedule(self.now, live, self.fluid)
-            target_ids = {id(r) for r in target}
-
-            for r in list(self.slot_req.values()):
-                if id(r) not in target_ids and r.state == ReqState.RUNNING:
-                    self._preempt(r)
-            for r in target:
-                if r.state == ReqState.SWAPPED and self.kv.can_allocate(r):
-                    self._swap_in(r)
-                elif r.state == ReqState.WAITING and self.kv.can_allocate(r):
-                    r.state = ReqState.RUNNING
-                    r.prefilled = True
-                    self._prefill_request(r)
-
-            # ---- one decode iteration over all occupied slots -------------
-            active = {s: r for s, r in self.slot_req.items()
-                      if r.state == ReqState.RUNNING}
-            if active:
-                lengths = np.zeros(self.kv.num_slots, np.int32)
-                tokens = np.zeros(self.kv.num_slots, np.int32)
-                for s, r in active.items():
-                    lengths[s] = r.context_len
-                    tokens[s] = r.output_tokens[-1] if r.output_tokens else 0
-                self.cache["length"] = jnp.asarray(lengths)
-                logits, self.cache = self._decode(
-                    self.params, jnp.asarray(tokens), self.cache
-                )
-                total_ctx = int(lengths.sum())
-                self._tick(self.lat.iter_latency(len(active), total_ctx))
-                nxt = np.asarray(jnp.argmax(logits, axis=-1))
-                for s, r in list(active.items()):
-                    self._emit(r, int(nxt[s]))
-            else:
-                self._tick(self.lat.hw.overhead)
-
-            self.iterations += 1
-            live = [r for r in live if r.is_live]
-            admit_arrivals()
-
+        A thin loop over step(): reset + submit all + iterate until
+        drained — the same batch semantics as ServingSimulator.run (on a
+        fresh engine the reset is a no-op, so this still reproduces the
+        pre-refactor monolithic loop bit-for-bit; the differential oracle
+        lives in tests/test_engine_steppable.py)."""
+        self.reset()
+        for r in sorted(workload, key=lambda r: r.arrival):
+            self.submit(r)
+        while self.iterations < max_iterations:
+            if not self.step():
+                break
         return workload

@@ -48,6 +48,7 @@ def test_smoke_forward_shapes_no_nan(arch):
 
 
 @pytest.mark.parametrize("arch", ASSIGNED)
+@pytest.mark.slow
 def test_smoke_train_step(arch):
     cfg = get_smoke_config(arch)
     m = Model(cfg)

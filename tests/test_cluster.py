@@ -190,6 +190,7 @@ def test_admission_none_admits_everything():
     assert len(res.admitted) == 200
 
 
+@pytest.mark.slow
 def test_admission_shed_protects_served_qoe():
     base = surge_cluster("none")
     shed = surge_cluster("shed")
@@ -202,6 +203,7 @@ def test_admission_shed_protects_served_qoe():
     assert shed.avg_qoe() < shed.avg_qoe(include_shed=False)
 
 
+@pytest.mark.slow
 def test_admission_defer_retries_before_shedding():
     shed = surge_cluster("shed")
     defer = surge_cluster("defer")

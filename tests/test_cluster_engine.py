@@ -1,0 +1,199 @@
+"""Real-model replicas in the cluster, validated engine-as-oracle.
+
+The cluster layer only ever talks to a replica through the
+`SteppableBackend` protocol, so a stepped `ServingEngine` (real JAX
+model, virtual clock, tiny granite-class config) plugs in where the
+discrete-event simulator normally sits. These tests pin down the three
+levels of agreement that make the fleet results trustworthy:
+
+  1. a 1-replica engine-backed cluster reproduces the bare engine
+     bit-for-bit (the cluster layer adds decisions *around* the engine,
+     never inside it — same invariant PR 1 proved for the simulator);
+  2. mixed fleets (simulator replicas next to engine replicas) serve a
+     shared trace to completion through one router;
+  3. the engine-backed cluster agrees with the simulator-backed cluster
+     per replica (see test_sim_vs_engine.py for the fleet extension).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import LatencyModel, QoESpec, SchedulerConfig, TPU_V5E
+from repro.cluster import (
+    ClusterConfig,
+    ClusterSimulator,
+    engine_backend,
+    mixed_backends,
+    simulator_backend,
+)
+from repro.models import Model
+from repro.serving import Request, ServingEngine, ServingSimulator
+from repro.core.scheduler import make_scheduler
+
+NUM_SLOTS = 8
+MAX_SEQ = 64
+CAP = NUM_SLOTS * MAX_SEQ
+
+
+@pytest.fixture(scope="module")
+def granite():
+    cfg = get_smoke_config("granite-3-2b")
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+def mk_wl(cfg, rng, n=10, out_len=10, stagger=0.2):
+    wl = []
+    for i in range(n):
+        plen = int(rng.integers(8, 24))
+        wl.append(Request(
+            rid=i, arrival=i * stagger, prompt_len=plen, output_len=out_len,
+            spec=QoESpec(ttft=1.0, tds=4.8),
+            prompt_tokens=rng.integers(0, cfg.vocab_size, plen),
+        ))
+    return wl
+
+
+def clone(wl):
+    return [r.clone() for r in wl]
+
+
+def engine_cluster_cfg(m, params, *, n_replicas=1, router="round_robin",
+                       scheduler="andes"):
+    return ClusterConfig(
+        n_replicas=n_replicas,
+        router=router,
+        scheduler=scheduler,
+        kv_capacity_tokens=CAP,
+        backend_factory=engine_backend(
+            m, params, num_slots=NUM_SLOTS, max_seq=MAX_SEQ,
+            capacity_tokens=CAP,
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
+# 1-replica invariance: routed engine ≡ bare engine, bit-for-bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheduler", [
+    pytest.param("fcfs", marks=pytest.mark.slow),
+    "andes",
+])
+def test_one_replica_engine_cluster_matches_bare_engine(granite, scheduler):
+    cfg, m, params = granite
+    lat = LatencyModel(cfg, TPU_V5E)
+    rng = np.random.default_rng(0)
+    wl = mk_wl(cfg, rng)
+
+    bare = ServingEngine(
+        m, params, make_scheduler(scheduler, CAP, lat, SchedulerConfig()),
+        lat, num_slots=NUM_SLOTS, max_seq=MAX_SEQ, capacity_tokens=CAP,
+    )
+    out_bare = bare.run(clone(wl), max_iterations=2000)
+
+    res = ClusterSimulator(
+        lat, engine_cluster_cfg(m, params, scheduler=scheduler)
+    ).run(clone(wl))
+
+    assert len(res.shed) == 0
+    assert len(res.admitted) == len(wl)
+    for a, b in zip(sorted(res.admitted, key=lambda r: r.rid), out_bare):
+        assert a.rid == b.rid
+        assert a.output_tokens == b.output_tokens, a.rid
+        assert a.emit_times == b.emit_times, a.rid       # exact floats
+        assert a.preemptions == b.preemptions, a.rid
+        assert a.final_qoe() == b.final_qoe(), a.rid
+
+
+def test_engine_backend_aligns_scheduler_capacity(granite):
+    """With no explicit capacity_tokens the engine clamps to what the
+    slot cache physically holds — and the replica's scheduler M must be
+    re-pointed at the same number, or the router/admission layers price
+    KV the engine does not have."""
+    cfg, m, params = granite
+    lat = LatencyModel(cfg, TPU_V5E)
+    cs = ClusterSimulator(lat, ClusterConfig(
+        n_replicas=1, router="round_robin", kv_capacity_tokens=65_000,
+        backend_factory=engine_backend(m, params, num_slots=4, max_seq=64),
+    ))
+    rep = cs.replicas[0]
+    assert rep.backend.kv.capacity_tokens == 4 * 64
+    assert rep.kv_capacity == 4 * 64          # sched.M matches the engine
+
+
+def test_engine_replica_backend_is_real_engine(granite):
+    cfg, m, params = granite
+    lat = LatencyModel(cfg, TPU_V5E)
+    cs = ClusterSimulator(lat, engine_cluster_cfg(m, params))
+    assert isinstance(cs.replicas[0].backend, ServingEngine)
+    # the replica views the engine through the protocol only
+    assert cs.replicas[0].kv_capacity == CAP
+    assert cs.replicas[0].clock == 0.0
+
+
+# ---------------------------------------------------------------------------
+# mixed fleets: simulator replicas next to real-model replicas
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("router", ["round_robin", "qoe"])
+def test_mixed_sim_engine_fleet_serves_to_completion(granite, router):
+    cfg, m, params = granite
+    lat = LatencyModel(cfg, TPU_V5E)
+    rng = np.random.default_rng(1)
+    wl = mk_wl(cfg, rng, n=14, out_len=8, stagger=0.1)
+
+    cluster_cfg = ClusterConfig(
+        n_replicas=2,
+        router=router,
+        kv_capacity_tokens=CAP,
+        backend_factory=mixed_backends([
+            engine_backend(m, params, num_slots=NUM_SLOTS,
+                           max_seq=MAX_SEQ, capacity_tokens=CAP),
+            simulator_backend,
+        ]),
+    )
+    cs = ClusterSimulator(lat, cluster_cfg)
+    assert isinstance(cs.replicas[0].backend, ServingEngine)
+    assert isinstance(cs.replicas[1].backend, ServingSimulator)
+
+    res = cs.run(clone(wl))
+    assert len(res.shed) == 0
+    assert all(r.generated >= r.output_len for r in res.admitted)
+    served = {rid: len(r.requests) for rid, r in res.replica_results.items()}
+    if router == "round_robin":
+        # strict alternation puts traffic on both; the QoE router may
+        # legitimately herd a light load onto the replica it prices best
+        assert all(n > 0 for n in served.values()), served
+    assert sum(served.values()) == len(wl)
+    q = res.qoes()
+    assert q.size == len(wl) and (q >= 0).all() and (q <= 1).all()
+    # the engine replica emits real tokens; the simulator replica does not
+    eng_reqs = res.replica_results[0].requests
+    assert all(len(r.output_tokens) == r.generated for r in eng_reqs)
+
+
+def test_engine_fleet_load_views(granite):
+    """Router load views (committed, kv_demand) work through the engine
+    backend mid-flight, not just at the end."""
+    cfg, m, params = granite
+    lat = LatencyModel(cfg, TPU_V5E)
+    rng = np.random.default_rng(2)
+    wl = mk_wl(cfg, rng, n=4, out_len=6, stagger=0.0)
+
+    cs = ClusterSimulator(lat, engine_cluster_cfg(m, params))
+    rep = cs.replicas[0]
+    for r in clone(wl):
+        rep.submit(r)
+    assert len(rep.committed()) == 4
+    assert rep.kv_demand() > 0
+    assert rep.has_work
+    rep.advance_to(0.5)
+    assert rep.clock >= 0.5 or not rep.has_work
+    while rep.step():
+        pass
+    assert not rep.has_work
+    res = rep.result()
+    assert res.total_tokens == sum(r.generated for r in res.requests)

@@ -47,6 +47,8 @@ for arch in ["llama3-8b", "qwen2-moe-a2.7b", "falcon-mamba-7b", "zamba2-2.7b"]:
     f = jax.jit(model.loss, in_shardings=(shard, bs))
     compiled = f.lower(params, b).compile()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # jax<0.5 wraps the dict in a list
+        cost = cost[0] if cost else {}
     results[arch] = {"ok": ok, "flops": float(cost.get("flops", 0))}
 
     # decode path compiles too

@@ -46,6 +46,7 @@ def llama():
     "llama3-8b", "falcon-mamba-7b", "zamba2-2.7b", "qwen2-moe-a2.7b",
     "seamless-m4t-medium", "pixtral-12b",
 ])
+@pytest.mark.slow
 def test_engine_serves_all_families(arch):
     cfg = get_smoke_config(arch)
     m = Model(cfg)
@@ -64,6 +65,7 @@ def test_engine_serves_all_families(arch):
 
 
 @pytest.mark.parametrize("mode", ["swap", "recompute"])
+@pytest.mark.slow
 def test_preemption_exactness(llama, mode):
     """Preempted-and-resumed requests must generate token-for-token the
     same output as an uncontended run (KV/state round-trip fidelity)."""

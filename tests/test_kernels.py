@@ -33,6 +33,7 @@ TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
 ])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.slow
 def test_flash_attention_sweep(b, s, h, kv, hd, dtype, causal):
     q = rand(0, (b, s, h, hd), dtype)
     k = rand(1, (b, s, kv, hd), dtype)
@@ -66,6 +67,7 @@ def test_flash_attention_sliding_window():
     (2, 512, 16, 1, 32),     # MQA deep cache
 ])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.slow
 def test_decode_attention_sweep(b, s, h, kv, hd, dtype):
     q = rand(0, (b, h, hd), dtype)
     k = rand(1, (b, s, kv, hd), dtype)
@@ -103,6 +105,7 @@ def test_decode_attention_window():
     (1, 64, 256, 8),
 ])
 @pytest.mark.parametrize("dtype", [jnp.float32])
+@pytest.mark.slow
 def test_selective_scan_sweep(b, s, d, n, dtype):
     ks = jax.random.split(jax.random.PRNGKey(0), 5)
     x = jax.random.normal(ks[0], (b, s, d), dtype)

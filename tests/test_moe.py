@@ -76,6 +76,7 @@ def test_padding_tokens_do_not_consume_capacity():
 
 @given(st.integers(8, 64), st.integers(0, 1000))
 @settings(max_examples=15, deadline=None)
+@pytest.mark.slow
 def test_chunked_equals_global_no_drop(seq, seed):
     old = moe.CAPACITY_FACTOR
     moe.CAPACITY_FACTOR = 16.0

@@ -39,6 +39,7 @@ def test_objectives_run_e2e(objective):
     assert res.avg_qoe() > 0.3
 
 
+@pytest.mark.slow
 def test_max_min_lifts_floor_vs_fcfs():
     cfg = get_config("opt-66b")
     lat = LatencyModel(cfg, A100_4X)

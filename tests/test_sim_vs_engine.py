@@ -11,6 +11,7 @@ import pytest
 
 from repro.configs import get_smoke_config
 from repro.core import LatencyModel, QoESpec, SchedulerConfig, TPU_V5E, make_scheduler
+from repro.cluster import ClusterConfig, ClusterSimulator, engine_backend
 from repro.models import Model
 from repro.serving import Request, ServingEngine
 from repro.serving.simulator import ServingSimulator, SimConfig
@@ -29,9 +30,7 @@ def mk_wl(cfg, rng, n=8, out_len=12):
 
 
 def clone(wl):
-    return [Request(rid=r.rid, arrival=r.arrival, prompt_len=r.prompt_len,
-                    output_len=r.output_len, spec=r.spec,
-                    prompt_tokens=r.prompt_tokens) for r in wl]
+    return [r.clone() for r in wl]
 
 
 @pytest.mark.parametrize("sched_name", ["fcfs", "andes"])
@@ -62,3 +61,42 @@ def test_sim_matches_engine_timings(sched_name):
         assert abs(te - ts) < max(0.05, 0.2 * ts), (re_.rid, te, ts)
         qe, qs = re_.final_qoe(), rs.final_qoe()
         assert abs(qe - qs) < 0.1, (re_.rid, qe, qs)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_fleet_sim_vs_engine_per_replica(seed):
+    """Sim-vs-engine agreement holds *per replica inside a fleet*: feed
+    the same trace through the same deterministic router to a
+    simulator-backed and an engine-backed 2-replica cluster; every
+    request must land on the same replica, and each replica's scheduling
+    trace must agree within the single-engine tolerances above."""
+    cfg = get_smoke_config("llama3-8b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    lat = LatencyModel(cfg, TPU_V5E)
+    rng = np.random.default_rng(seed)
+    wl = mk_wl(cfg, rng, n=12)
+
+    cap = 8 * 64
+    common = dict(n_replicas=2, router="round_robin", scheduler="andes",
+                  kv_capacity_tokens=cap)
+    res_sim = ClusterSimulator(lat, ClusterConfig(**common)).run(clone(wl))
+    res_eng = ClusterSimulator(lat, ClusterConfig(
+        **common,
+        backend_factory=engine_backend(model, params, num_slots=8,
+                                       max_seq=64, capacity_tokens=cap),
+    )).run(clone(wl))
+
+    assert res_sim.replica_results.keys() == res_eng.replica_results.keys()
+    for rid in res_sim.replica_results:
+        per_sim = res_sim.replica_results[rid].requests
+        per_eng = res_eng.replica_results[rid].requests
+        # identical placement (router decisions are backend-independent)
+        assert [r.rid for r in per_sim] == [r.rid for r in per_eng], rid
+        assert len(per_sim) > 0, rid
+        for re_, rs in zip(per_eng, per_sim):
+            assert re_.generated == rs.generated, (rid, re_.rid)
+            te, ts = re_.final_ttft(), rs.final_ttft()
+            assert abs(te - ts) < max(0.05, 0.2 * ts), (rid, re_.rid, te, ts)
+            qe, qs = re_.final_qoe(), rs.final_qoe()
+            assert abs(qe - qs) < 0.1, (rid, re_.rid, qe, qs)

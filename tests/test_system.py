@@ -5,6 +5,7 @@ on the simulator (paper scale) and the real engine (real model on CPU).
 """
 import jax
 import numpy as np
+import pytest
 
 from repro.configs import get_config, get_smoke_config
 from repro.core import (
@@ -40,6 +41,7 @@ def test_end_to_end_sim_pipeline():
         assert np.all(gaps >= 1.0 / r.spec.tds - 1e-9)
 
 
+@pytest.mark.slow
 def test_end_to_end_real_engine_qoe():
     """Real model + Andes + contention: good QoE, exact accounting."""
     cfg = get_smoke_config("llama3-8b")

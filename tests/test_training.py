@@ -43,6 +43,7 @@ def test_loss_decreases():
     assert losses[-1] < losses[0] - 1.0
 
 
+@pytest.mark.slow
 def test_microbatched_grads_match_full():
     """Gradient accumulation must equal the full-batch gradient step."""
     cfg = get_smoke_config("granite-3-2b")
@@ -61,6 +62,7 @@ def test_microbatched_grads_match_full():
                                    atol=2e-5, rtol=2e-4)
 
 
+@pytest.mark.slow
 def test_remat_matches_no_remat():
     cfg = get_smoke_config("llama3-8b")
     batch_it = packed_batches(cfg.vocab_size, 4, 32, seed=2)
