@@ -2,11 +2,11 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast test-slow bench bench-cluster bench-cluster-engine \
-        example-cluster example-cluster-engine
+        bench-spec example-cluster example-cluster-engine
 
 # ---- test tiers -----------------------------------------------------------
 # tier-1  (make test-fast): everything NOT marked `slow` — the ROADMAP.md
-#         verify command and the per-PR CI gate; <5 min on CPU.
+#         verify command and the per-PR CI gate; ~6 min on CPU.
 # slow    (make test-slow): kernel sweeps, small-mesh compile checks, long
 #         e2e paper-claim runs and engine differential suites; run on main
 #         pushes (see .github/workflows/test.yml) or locally before merge.
@@ -33,6 +33,11 @@ bench-cluster:
 # engine-backed mode: real-model replicas cross-checked against the sim fleet
 bench-cluster-engine:
 	$(PYTHON) -m benchmarks.cluster_qoe --engine
+
+# speculative decoding: lossless token-identity gate + decode-step reduction
+# vs the baseline engine on one trace
+bench-spec:
+	$(PYTHON) -m benchmarks.cluster_qoe --speculative
 
 example-cluster:
 	$(PYTHON) examples/serve_cluster.py

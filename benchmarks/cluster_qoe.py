@@ -13,7 +13,10 @@ requests lifts the QoE of everyone actually served.
 
 Run via `python -m benchmarks.run --only cluster` (CSV rows, like every
 figure module) or `python -m benchmarks.cluster_qoe [--out cluster.json]`
-for a standalone JSON dump.
+for a standalone JSON dump. `--engine` cross-checks real-model replicas
+against the simulator fleet; `--speculative` reports the speculative
+engine's lossless token-identity gate and decode-step reduction vs the
+baseline engine (`make bench-spec`).
 """
 from __future__ import annotations
 
@@ -177,6 +180,92 @@ def _engine_sweep(quick: bool):
     return rows
 
 
+def _speculative_sweep(quick: bool):
+    """Speculative vs baseline engine replicas on one trace: the lossless
+    gate as benchmark rows. Per k, a speculative fleet must emit the
+    *identical* per-request token streams as the baseline engine fleet
+    (greedy verification is exact) while spending strictly fewer decode
+    steps whenever any proposal is accepted; QoE moves with the burst
+    delivery shape that pace_delivery smooths back out."""
+    import dataclasses
+
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.core import SpeculativeLatencyModel, TPU_V5E, make_scheduler
+    from repro.core.qoe import QoESpec
+    from repro.core.request import Request
+    from repro.models import Model
+    from repro.serving import ServingEngine
+    from repro.workload.arrivals import gamma_arrivals
+
+    cfg = get_smoke_config("llama3-8b")   # untied embeddings: varied chains
+    model_obj = Model(cfg)
+    params = model_obj.init(jax.random.PRNGKey(0))
+    # drafts: the target itself (acceptance ceiling) and a perturbed copy
+    # (realistic partial agreement); both share the tokenizer/vocab
+    perturbed = jax.tree.map(
+        lambda a: a + 1e-3 * jax.random.normal(
+            jax.random.PRNGKey(9), a.shape, a.dtype), params)
+    draft_cfg = dataclasses.replace(cfg, name="llama3-8b-smoke-draft")
+    lat = LatencyModel(cfg, TPU_V5E)
+
+    n = 12 if quick else 32
+    rng = np.random.default_rng(4)
+    arrivals = gamma_arrivals(10.0, n, rng, cv=2.0)
+    wl_proto = []
+    for i in range(n):
+        plen = int(rng.integers(8, 24))
+        wl_proto.append(Request(
+            rid=i, arrival=float(arrivals[i]), prompt_len=plen,
+            output_len=int(rng.integers(10, 20)),
+            spec=QoESpec(ttft=1.0, tds=4.8),
+            prompt_tokens=rng.integers(0, cfg.vocab_size, plen),
+        ))
+
+    base_wl = [r.clone() for r in wl_proto]
+    base = ServingEngine(
+        model_obj, params, make_scheduler("andes", 400, lat), lat,
+        num_slots=6, max_seq=96, capacity_tokens=400,
+    )
+    base.run(base_wl, max_iterations=5000)
+    base_res = base.result()
+    base_tokens = {r.rid: r.output_tokens for r in base_wl}
+
+    rows = [{
+        "name": "cluster/speculative/baseline",
+        "avg_qoe": round(base_res.avg_qoe(), 4),
+        "decode_steps": base_res.iterations,
+        "tokens": base_res.total_tokens,
+    }]
+    for draft_name, dparams in (("exact", params), ("perturbed", perturbed)):
+        for k in ((2,) if quick else (2, 4)):
+            slat = SpeculativeLatencyModel(cfg, TPU_V5E, draft_cfg, k=k)
+            spec_wl = [r.clone() for r in wl_proto]
+            eng = ServingEngine(
+                model_obj, params, make_scheduler("andes", 400, slat), slat,
+                num_slots=6, max_seq=96, capacity_tokens=400,
+                draft_model=model_obj, draft_params=dparams, spec_k=k,
+            )
+            eng.run(spec_wl, max_iterations=5000)
+            res = eng.result()
+            stats = eng.spec_stats()
+            lossless = all(r.output_tokens == base_tokens[r.rid]
+                           for r in spec_wl)
+            rows.append({
+                "name": f"cluster/speculative/draft={draft_name}/k={k}",
+                "avg_qoe": round(res.avg_qoe(), 4),
+                "decode_steps": res.iterations,
+                "step_reduction": round(
+                    1.0 - res.iterations / base_res.iterations, 4),
+                "tokens": res.total_tokens,
+                "acceptance_rate": round(stats["acceptance_rate"], 4),
+                "lossless": lossless,
+                "fewer_steps": res.iterations < base_res.iterations,
+            })
+    return rows
+
+
 def run(quick: bool = False):
     return _router_sweep(quick) + _admission_sweep(quick)
 
@@ -186,6 +275,13 @@ def run_engine(quick: bool = False):
     --engine). Not part of the default sweep: it initializes a real model
     and is meant as the fleet-level oracle check, not a paper figure."""
     return _engine_sweep(quick)
+
+
+def run_speculative(quick: bool = False):
+    """Standalone speculative mode (python -m benchmarks.cluster_qoe
+    --speculative): spec-vs-baseline QoE / decode-step rows with the
+    lossless token-identity gate reported per row."""
+    return _speculative_sweep(quick)
 
 
 def validate(rows) -> str:
@@ -217,8 +313,25 @@ if __name__ == "__main__":
     ap.add_argument("--engine", action="store_true",
                     help="engine-backed mode: real-model replicas "
                          "(granite smoke config) vs the simulator fleet")
+    ap.add_argument("--speculative", action="store_true",
+                    help="speculative mode: draft+verify engine replicas "
+                         "vs the baseline engine on one trace (lossless "
+                         "token-identity gate + step-count reduction)")
     args = ap.parse_args()
-    if args.engine:
+    if args.speculative:
+        rows = run_speculative(quick=not args.full)
+        for r in rows:
+            print(r)
+        spec_rows = [r for r in rows if "lossless" in r]
+        lossless = all(r["lossless"] for r in spec_rows)
+        fewer = all(r["fewer_steps"] for r in spec_rows
+                    if r["acceptance_rate"] > 0)
+        verdict = "OK" if lossless and fewer else "MISMATCH"
+        best = max(r["step_reduction"] for r in spec_rows)
+        print(f"{verdict}: speculative ≡ baseline token-for-token "
+              f"(lossless={lossless}), strictly fewer steps when accepting "
+              f"({fewer}), best step reduction {best:.0%}")
+    elif args.engine:
         rows = run_engine(quick=not args.full)
         for r in rows:
             print(r)

@@ -30,6 +30,7 @@ from repro.cluster.backends import (
     engine_backend,
     mixed_backends,
     simulator_backend,
+    speculative_backend,
 )
 from repro.cluster.cluster_sim import ClusterConfig, ClusterResult, ClusterSimulator
 from repro.cluster.replica import Replica, SteppableBackend
@@ -48,7 +49,7 @@ from repro.cluster.router import (
 __all__ = [
     "Replica", "SteppableBackend",
     "BackendFactory", "simulator_backend", "engine_backend",
-    "mixed_backends",
+    "speculative_backend", "mixed_backends",
     "Router", "RouterConfig", "RouteDecision", "RoundRobinRouter",
     "JSQRouter", "QoEAwareRouter", "ROUTERS", "make_router",
     "marginal_qoe_gain",

@@ -8,9 +8,12 @@ uses. `engine_backend(...)` returns a factory whose replicas run the real
 JAX model through the (now steppable) `ServingEngine` — same scheduler,
 same latency model, virtual clock — so a fleet can be validated against
 actual token emission on CPU-sized configs (tests/test_cluster_engine.py).
-`mixed_backends(...)` round-robins factories over replica ids, giving
-heterogeneous fleets where e.g. replica 0 is a real model and the rest
-are simulated (the DiSCo device/server-split direction in ROADMAP.md).
+`speculative_backend(...)` runs draft+verify speculative decoding inside
+each replica (same token streams as `engine_backend`, fewer steps — see
+serving/speculative.py). `mixed_backends(...)` round-robins factories over
+replica ids, giving heterogeneous fleets where e.g. replica 0 is a real
+model and the rest are simulated, or half the fleet speculates (the DiSCo
+device/server-split and fast/slow-decode-path directions in ROADMAP.md).
 
 Weights are shared across engine replicas (the factory closes over one
 `(model, params)` pair); each replica gets its own KV cache and fluid
@@ -20,7 +23,7 @@ from __future__ import annotations
 
 from typing import Callable, Optional, Sequence
 
-from repro.core.latency_model import LatencyModel
+from repro.core.latency_model import LatencyModel, SpeculativeLatencyModel
 from repro.core.scheduler import Scheduler
 from repro.cluster.replica import SteppableBackend
 from repro.serving.simulator import ServingSimulator, SimConfig
@@ -70,6 +73,54 @@ def engine_backend(
     return factory
 
 
+def speculative_backend(
+    model,
+    params,
+    draft_model,
+    draft_params,
+    *,
+    spec_k: int = 3,
+    num_slots: int = 8,
+    max_seq: int = 128,
+    capacity_tokens: Optional[int] = None,
+    clock: str = "virtual",
+    eos_id: int = -1,
+) -> BackendFactory:
+    """Factory of speculative real-model replicas: each one a
+    `ServingEngine` whose decode steps draft-propose `spec_k` tokens with
+    the shared `(draft_model, draft_params)` and verify them against the
+    shared target in one pass (lossless — the replica emits the identical
+    token stream an `engine_backend` replica would, in fewer steps).
+
+    The replica's scheduler is re-pointed at a `SpeculativeLatencyModel`
+    built on its own hardware spec, so knapsack pricing, the router's
+    marginal-gain queries, and admission control all see the expected
+    1..k+1-token bursts rather than one-token steps. Combine with
+    `engine_backend` via `mixed_backends` for spec/non-spec fleets
+    (the ROADMAP's heterogeneous-decode-path direction, DiSCo-style)."""
+    def factory(replica_id: int, scheduler: Scheduler,
+                lat: LatencyModel, cluster_cfg) -> SteppableBackend:
+        from repro.serving.engine import ServingEngine
+        cap = capacity_tokens
+        if cap is None:
+            cap = min(cluster_cfg.kv_capacity_tokens, num_slots * max_seq)
+        scheduler.M = min(scheduler.M, cap)
+        spec_lat = SpeculativeLatencyModel(
+            model.cfg, lat.hw, draft_model.cfg, k=spec_k,
+            dtype_bytes=lat.dtype_bytes, avg_ctx=lat.avg_ctx,
+        )
+        scheduler.lat = spec_lat
+        return ServingEngine(
+            model, params, scheduler, spec_lat,
+            num_slots=num_slots, max_seq=max_seq, capacity_tokens=cap,
+            preemption_mode=cluster_cfg.preemption_mode,
+            clock=clock, eos_id=eos_id,
+            draft_model=draft_model, draft_params=draft_params,
+            spec_k=spec_k,
+        )
+    return factory
+
+
 def mixed_backends(factories: Sequence[BackendFactory]) -> BackendFactory:
     """Replica i gets factories[i % len(factories)] — e.g. one real engine
     cross-checking a fleet of simulators."""
@@ -85,4 +136,4 @@ def mixed_backends(factories: Sequence[BackendFactory]) -> BackendFactory:
 
 
 __all__ = ["BackendFactory", "simulator_backend", "engine_backend",
-           "mixed_backends"]
+           "speculative_backend", "mixed_backends"]

@@ -149,7 +149,13 @@ class ClusterSimulator:
         factory = cfg.backend_factory or simulator_backend
         backend = factory(rid, sched, lat, cfg)
         backend.now = launched_at    # replica is born at provision time
-        return Replica(rid, backend, lat, launched_at=launched_at)
+        # the factory may re-point the scheduler's latency model (e.g.
+        # speculative_backend installs a SpeculativeLatencyModel); the
+        # replica's routing/admission views must price with the same model
+        # the backend does, so the QoE router sees a speculative replica's
+        # true expected-burst token rate. For stock factories sched.lat IS
+        # the lat picked above, so nothing changes.
+        return Replica(rid, backend, sched.lat, launched_at=launched_at)
 
     def _advance_all(self, t: float) -> None:
         for rep in self.replicas:

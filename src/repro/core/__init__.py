@@ -6,6 +6,7 @@ from repro.core.latency_model import (
     TPU_V5E_POD,
     HardwareSpec,
     LatencyModel,
+    SpeculativeLatencyModel,
 )
 from repro.core.objectives import (
     FLEET_OBJECTIVES,
@@ -35,7 +36,8 @@ from repro.core.token_buffer import TokenBuffer
 __all__ = [
     "QoESpec", "FluidQoE", "pace_delivery", "qoe_exact", "predict_request_qoe",
     "FLEET_OBJECTIVES", "fleet_avg_qoe", "fleet_min_qoe", "fleet_slo_attainment",
-    "HardwareSpec", "LatencyModel", "TPU_V5E", "TPU_V5E_POD", "A100_4X", "A40_4X",
+    "HardwareSpec", "LatencyModel", "SpeculativeLatencyModel",
+    "TPU_V5E", "TPU_V5E_POD", "A100_4X", "A40_4X",
     "Scheduler", "SchedulerConfig", "FCFSScheduler", "RoundRobinScheduler",
     "AndesScheduler", "AndesDPScheduler", "SCHEDULERS", "make_scheduler",
     "TokenBuffer",

@@ -90,6 +90,34 @@ class LatencyModel:
         """Per-request decode speed (tokens/s) at batch size B."""
         return 1.0 / self.iter_latency(batch_size, total_ctx)
 
+    def per_token_latency(self, batch_size: int,
+                          total_ctx: int | None = None) -> float:
+        """Seconds per *emitted* token. For the one-token-per-iteration
+        baseline this IS iter_latency (the scheduler's pacing checks call
+        this so the speculative model can report iter/E[tokens] instead
+        without perturbing baseline float behavior bit-for-bit)."""
+        return self.iter_latency(batch_size, total_ctx)
+
+    def verify_latency(self, batch_size: int, total_ctx: int | None = None,
+                       k: int = 0) -> float:
+        """One speculative verify pass: k+1 positions per request in a
+        single forward. FLOPs scale with the window ((k+1)x decode), but
+        HBM traffic is still dominated by the one weight/KV pass — that
+        asymmetry (decode is memory-bound, Appendix B) is the entire
+        speculative-decoding bargain: ~one iteration's wall time buys up
+        to k+1 tokens."""
+        if batch_size <= 0:
+            return self.hw.overhead
+        ctx = total_ctx if total_ctx is not None else batch_size * self.avg_ctx
+        flops = 2.0 * self.active_params * batch_size * (k + 1)
+        bytes_ = (
+            self.param_bytes
+            + (ctx + batch_size * (k + 1)) * self.kv_tok_bytes
+            + batch_size * self.state_bytes
+        )
+        return self.hw.overhead + max(flops / self._agg_flops,
+                                      bytes_ / self._agg_bw)
+
     # -- prefill ----------------------------------------------------------------
 
     def prefill_latency(self, prompt_tokens: int) -> float:
@@ -118,6 +146,97 @@ class LatencyModel:
         while lo < hi:
             mid = (lo + hi + 1) // 2
             if self.iter_latency(mid) <= max_iter_latency:
+                lo = mid
+            else:
+                hi = mid - 1
+        return lo
+
+
+class SpeculativeLatencyModel(LatencyModel):
+    """Cost model for a speculative engine step: k+1 greedy draft decodes
+    plus one (k+1)-position target verify, yielding 1..k+1 tokens.
+
+    The scheduler prices QoE gains in tokens/s; with speculation that rate
+    is E[accepted+1] / step_latency, where the expected accepted length is
+    a deterministic EMA of the engine's observed acceptance counts
+    (`observe_acceptance`, updated after every verify). All pacing entry
+    points the Andes scheduler uses — `token_rate` for Q_serve(B),
+    `per_token_latency` for the latency-pressure trigger,
+    `max_batch_from_latency` for B_min — account for the expected burst,
+    so knapsack pricing and preemption decisions see the true delivery
+    speed of a speculative replica. `prefill_latency` / `swap_latency`
+    include the draft's share: a speculative request prefills and parks
+    *two* caches (Appendix D accounting, extended).
+    """
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        hw: HardwareSpec,
+        draft_cfg: ModelConfig,
+        *,
+        k: int,
+        dtype_bytes: int = 2,
+        avg_ctx: int = 512,
+        accept_prior: float = 0.5,
+        ema_alpha: float = 0.05,
+    ):
+        super().__init__(cfg, hw, dtype_bytes=dtype_bytes, avg_ctx=avg_ctx)
+        if k < 1:
+            raise ValueError(f"speculation needs k >= 1, got {k}")
+        self.k = int(k)
+        self.draft = LatencyModel(draft_cfg, hw, dtype_bytes=dtype_bytes,
+                                  avg_ctx=avg_ctx)
+        self._exp_accept0 = float(accept_prior) * self.k
+        self._exp_accept = self._exp_accept0
+        self._alpha = float(ema_alpha)
+
+    def observe_acceptance(self, accepted: int) -> None:
+        """Feed one verify outcome (0..k accepted) into the EMA."""
+        self._exp_accept += self._alpha * (accepted - self._exp_accept)
+
+    def reset(self) -> None:
+        """Restore the acceptance EMA to its prior. ServingEngine.reset()
+        calls this so back-to-back run() calls on one speculative engine
+        price (and therefore clock) exactly like a fresh engine."""
+        self._exp_accept = self._exp_accept0
+
+    @property
+    def expected_step_tokens(self) -> float:
+        """E[tokens emitted per step] = E[accepted] + 1 (correction/bonus)."""
+        return 1.0 + self._exp_accept
+
+    # -- one speculative step -------------------------------------------------
+
+    def iter_latency(self, batch_size: int, total_ctx: int | None = None) -> float:
+        if batch_size <= 0:
+            return self.hw.overhead
+        return ((self.k + 1) * self.draft.iter_latency(batch_size, total_ctx)
+                + self.verify_latency(batch_size, total_ctx, self.k))
+
+    def token_rate(self, batch_size: int, total_ctx: int | None = None) -> float:
+        return self.expected_step_tokens / self.iter_latency(batch_size, total_ctx)
+
+    def per_token_latency(self, batch_size: int,
+                          total_ctx: int | None = None) -> float:
+        return self.iter_latency(batch_size, total_ctx) / self.expected_step_tokens
+
+    # -- both caches move -----------------------------------------------------
+
+    def prefill_latency(self, prompt_tokens: int) -> float:
+        return (super().prefill_latency(prompt_tokens)
+                + self.draft.prefill_latency(prompt_tokens))
+
+    def swap_latency(self, ctx_tokens: int) -> float:
+        return (super().swap_latency(ctx_tokens)
+                + self.draft.swap_latency(ctx_tokens))
+
+    def max_batch_from_latency(self, max_iter_latency: float) -> int:
+        """Largest B whose *per-token* latency stays under the bound."""
+        lo, hi = 1, 1 << 20
+        while lo < hi:
+            mid = (lo + hi + 1) // 2
+            if self.per_token_latency(mid) <= max_iter_latency:
                 lo = mid
             else:
                 hi = mid - 1

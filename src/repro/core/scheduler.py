@@ -16,6 +16,14 @@ Optimizations from §4.2 implemented here:
   #2 batch-size pruning     — B ∈ [B_min, B_max]
   #3 greedy packing         — O(N log N)
   #4 preemption cap         — average preemptions/request ≤ P
+
+Speculative replicas: a decode step there costs draft(k)+verify(k) and
+yields 1..k+1 tokens, so every pacing quantity the solver consumes —
+token_rate for Q_serve(B), per_token_latency for the latency trigger,
+max_batch_from_latency for B_min, prefill/swap delays for _serve_delay —
+is asked of the LatencyModel, and a SpeculativeLatencyModel answers with
+the expected-accepted-length already folded in (EMA of observed
+acceptance). The scheduler code itself stays regime-agnostic.
 """
 from __future__ import annotations
 
@@ -226,12 +234,15 @@ class AndesScheduler(Scheduler):
             or used > self.cfg.memory_watermark * self.M
         if mem_pressure:
             return True
-        # latency pressure: token latency at "everyone runs" batch size would
-        # violate the most stringent TDS in the system
+        # latency pressure: per-token latency at "everyone runs" batch size
+        # would violate the most stringent TDS in the system. Per *token*,
+        # not per iteration: a speculative step costs verify(k) but yields
+        # E[accepted+1] tokens (SpeculativeLatencyModel folds that in; for
+        # the baseline model per_token_latency IS iter_latency, bit-for-bit).
         stiffest = max((r.spec.tds for r in live), default=0.0)
         if stiffest <= 0:
             return False
-        lat_all = self.lat.iter_latency(len(live))
+        lat_all = self.lat.per_token_latency(len(live))
         return lat_all > 1.0 / stiffest
 
     def _admit_all(self, live, weights) -> List[Request]:

@@ -27,8 +27,8 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.models import moe as moe_lib
 from repro.models.layers import mlp_apply
-from repro.models.moe import CAPACITY_FACTOR
 
 
 def moe_apply_ep(p, x: jax.Array, cfg: ModelConfig, mesh,
@@ -81,7 +81,14 @@ def moe_apply_ep(p, x: jax.Array, cfg: ModelConfig, mesh,
         local_e = jnp.where(is_local, local_e, e_local)        # waste row
         onehot = jax.nn.one_hot(local_e, e_local)              # (T,k,E_loc)
 
-        cap = int(CAPACITY_FACTOR * t * m.top_k / m.num_experts) + 1
+        # live module-attribute lookup, NOT a from-import: the capacity
+        # knob must stay shared with the GSPMD reference. A value bound at
+        # import time silently diverges when callers (the no-drop
+        # differential test, notably) retune moe.CAPACITY_FACTOR — the EP
+        # path then drops tokens the reference keeps, which surfaced as a
+        # ~1.6e-3 "numerical drift" in the divisible case that was really
+        # a few dropped tokens.
+        cap = int(moe_lib.CAPACITY_FACTOR * t * m.top_k / m.num_experts) + 1
         cap = min(cap, t)
         flat_e = local_e.reshape(t * m.top_k)
         flat_w = (top_w * is_local).reshape(t * m.top_k)

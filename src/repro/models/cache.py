@@ -13,6 +13,16 @@ A single pytree carries everything the decode step needs:
 
 Static shapes are deliberate (TPU/XLA); token-granular *accounting* for the
 scheduler happens in serving/kv_manager.py, not here. See DESIGN.md §3.
+
+Speculative-decoding rollback contract (`with_lengths`): for attention
+caches, `length` alone defines validity — attention never reads past it,
+and decode/verify writes always land at the current `length`, so entries a
+rejected proposal left beyond the accepted frontier are first overwritten
+before they could ever be attended. Rolling back a speculation is therefore
+just re-pinning `length` to the committed context; no KV movement. (SSM
+recurrent state has no such positional gate — state at the accepted
+position would need checkpointing — which is why the speculative engine is
+restricted to attention-only architectures, see serving/speculative.py.)
 """
 from __future__ import annotations
 
@@ -68,6 +78,15 @@ def init_cache(
         cache["enc_length"] = arr((batch,), jnp.int32)
 
     return cache
+
+
+def with_lengths(cache, lengths):
+    """Re-pin the per-slot valid-context lengths (pure: returns a new dict).
+
+    The serving engine calls this before every decode/verify iteration with
+    each slot's committed context length — which is also the whole
+    speculative-decoding rollback path (see module docstring)."""
+    return dict(cache, length=jnp.asarray(lengths, jnp.int32))
 
 
 def _num_attn_applications(cfg: ModelConfig) -> int:

@@ -185,6 +185,24 @@ class Model:
             window=self.window, kv_repeat=self.kv_repeat,
         )
 
+    def verify_step(self, params, tokens, cache):
+        """Speculative-decoding verify: tokens (B, T) int32 ->
+        (logits (B, T, V), cache'). One jitted call covering the whole
+        proposal window, bit-identical to T sequential decode_step calls
+        (see transformer.verify_step for why that identity is the point)."""
+        return tfm.verify_step(
+            params, self.cfg, tokens, cache, impl=self.impl,
+            window=self.window, kv_repeat=self.kv_repeat,
+        )
+
+    def propose_step(self, params, tokens, cache, k: int):
+        """Draft-side greedy proposal: tokens (B,) int32 ->
+        (proposals (B, k+1), cache'). Static k (jit recompiles per k)."""
+        return tfm.propose_step(
+            params, self.cfg, tokens, cache, k, impl=self.impl,
+            window=self.window, kv_repeat=self.kv_repeat,
+        )
+
     # ------------------------------------------------------------- dry-run IO
     def input_specs(self, shape: ShapeConfig, *, act_dtype=jnp.bfloat16):
         """ShapeDtypeStruct stand-ins for the phase's step function inputs."""

@@ -496,3 +496,81 @@ def decode_step(
     logits = unembed(params, h)
     cache = dict(cache, length=lengths + 1)
     return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# Multi-position verify step (speculative decoding)
+# ---------------------------------------------------------------------------
+
+def verify_step(
+    params,
+    cfg: ModelConfig,
+    tokens,            # (B, T) int32 — T = k+1 proposal window per slot
+    cache,
+    *,
+    impl: str = "ref",
+    window: Optional[int] = None,
+    kv_repeat: int = 1,
+):
+    """Verify a T-token proposal window in one jitted call.
+
+    Scans `decode_step` over the T positions: position j consumes
+    tokens[:, j] against the cache as grown by positions < j, exactly as T
+    sequential decode iterations would. This form is deliberate — the
+    speculative engine's losslessness gate demands logits *bit-identical*
+    to the non-speculative step-by-step decode (argmax ties must break the
+    same way), which a parallel multi-position attention with a different
+    reduction order could not guarantee. tests/test_speculative.py pins
+    verify_step ≡ sequential decode_step bit-for-bit; the hardware *cost*
+    of the fused window (one weight pass for T tokens) is modeled by
+    LatencyModel.verify_latency, which is what makes speculation pay.
+
+    Returns (logits (B, T, V), cache') with cache length advanced by T.
+    Rejected positions leave stale KV beyond the accepted length; the
+    serving layer rolls that back by length alone (models/cache.py
+    docstring: length-gated attention never reads past `length`, and the
+    next write lands on the first stale position).
+    """
+    def body(c, tok):
+        logits, c = decode_step(
+            params, cfg, tok, c, impl=impl, window=window,
+            kv_repeat=kv_repeat,
+        )
+        return c, logits
+
+    cache, logits = jax.lax.scan(body, cache, jnp.moveaxis(tokens, 0, 1))
+    return jnp.moveaxis(logits, 0, 1), cache
+
+
+def propose_step(
+    params,
+    cfg: ModelConfig,
+    tokens,            # (B,) int32 — last committed token per slot
+    cache,
+    k: int,
+    *,
+    impl: str = "ref",
+    window: Optional[int] = None,
+    kv_repeat: int = 1,
+):
+    """Greedy-autoregress k+1 tokens in one jitted call (the draft side of
+    speculative decoding): step 0 consumes `tokens`, every later step
+    consumes its own argmax. The extra (k+1)-th step exists to keep the
+    draft cache invariant uniform — after a fully-accepted proposal the
+    draft must already have consumed its own k-th token so that the next
+    round's single catch-up input is always exactly the last committed
+    token (see serving/speculative.py). Returns (proposals (B, k+1), cache').
+    """
+    def body(carry, _):
+        tok, c = carry
+        logits, c = decode_step(
+            params, cfg, tok, c, impl=impl, window=window,
+            kv_repeat=kv_repeat,
+        )
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return (nxt, c), nxt
+
+    (_, cache), toks = jax.lax.scan(
+        body, (tokens, cache), None, length=k + 1
+    )
+    return jnp.moveaxis(toks, 0, 1), cache

@@ -24,6 +24,18 @@ reproduces the pre-refactor batch loop bit-for-bit
 as the differential oracle). This makes ServingEngine satisfy
 ``repro.cluster.replica.SteppableBackend`` verbatim, so real-model
 replicas plug into the cluster layer unchanged.
+
+Speculative decoding (``draft_model``/``spec_k``): each scheduled step a
+small draft model greedily proposes ``k`` tokens per running request
+(serving/speculative.py), the target verifies the whole window in one
+``verify_step`` call, and the longest prefix matching the target's own
+greedy argmax is committed plus the correction/bonus token — so every
+request's emitted token sequence is *identical* to the non-speculative
+engine's (lossless by construction; tests/test_speculative.py asserts it
+trace-for-trace) while decode steps shrink by the acceptance factor. A
+step emits a 1..k+1 token burst at one timestamp; FluidQoE.emit absorbs
+it and the client-side pace_delivery smooths it back to the spec'd TDS,
+which is precisely the paper's QoE machinery rewarding burst delivery.
 """
 from __future__ import annotations
 
@@ -39,10 +51,12 @@ import numpy as np
 from repro.core.latency_model import LatencyModel
 from repro.core.qoe import FluidQoE
 from repro.core.scheduler import Scheduler
+from repro.models import cache as cache_lib
 from repro.models.model import Model
 from repro.serving.kv_manager import KVSlotManager
 from repro.serving.request import Request, ReqState
 from repro.serving.simulator import SimResult
+from repro.serving.speculative import DraftProposer, check_speculation_compatible
 
 
 def _slot_axis(leaf_ndim: int) -> int:
@@ -96,6 +110,9 @@ class ServingEngine:
         clock: str = "virtual",
         eos_id: int = -1,
         cache_dtype=jnp.float32,
+        draft_model: Optional[Model] = None,
+        draft_params=None,
+        spec_k: int = 0,
     ):
         self.model = model
         self.params = params
@@ -108,9 +125,31 @@ class ServingEngine:
         self._num_slots = num_slots
         self._capacity_tokens = capacity_tokens
 
+        # ---- speculative decoding (optional) --------------------------
+        self.spec_k = int(spec_k)
+        # a verify window writes up to k+1 positions past a slot's
+        # committed context; pad the *physical* cache by that much so the
+        # writes never hit the dynamic_update_slice index clamp (which
+        # would silently corrupt position max_seq-1 for requests ending
+        # within k tokens of the boundary — breaking the lossless gate).
+        # max_seq stays the logical per-request bound: emission is capped
+        # at it and KV accounting never counts the slack.
+        self._cache_seq = max_seq + (self.spec_k + 1 if self.spec_k else 0)
+        if self.spec_k:
+            if draft_model is None or draft_params is None:
+                raise ValueError("spec_k > 0 requires draft_model/draft_params")
+            check_speculation_compatible(model, draft_model)
+            self.draft = DraftProposer(
+                draft_model, draft_params, num_slots=num_slots,
+                max_seq=self._cache_seq, cache_dtype=cache_dtype,
+            )
+            self._verify = jax.jit(model.verify_step)
+        else:
+            self.draft = None
+
         enc_seq = max_seq // 4 if model.cfg.kind in ("encdec", "audio") else 0
         self.cache = model.init_cache(
-            num_slots, max_seq, enc_seq=enc_seq, dtype=cache_dtype
+            num_slots, self._cache_seq, enc_seq=enc_seq, dtype=cache_dtype
         )
         self._decode = jax.jit(model.decode_step)
         self.reset()
@@ -120,8 +159,15 @@ class ServingEngine:
         """Clear all serving state (the device cache pytree is reused; live
         slots are always re-written at prefill/swap-in time)."""
         self.kv = KVSlotManager(self._num_slots, self.max_seq,
-                                self._capacity_tokens)
+                                self._capacity_tokens,
+                                burst_reserve=(self.spec_k + 1
+                                               if self.spec_k else 0))
         self.fluid = FluidQoE()
+        self.spec_steps = 0          # verify iterations executed
+        self.spec_proposed = 0       # draft tokens proposed per verify (k each)
+        self.spec_accepted = 0       # draft tokens accepted by the target
+        if hasattr(self.lat, "reset"):
+            self.lat.reset()         # speculative acceptance EMA -> prior
         self.now = 0.0
         self.slot_req: Dict[int, Request] = {}
         self.preemptions = 0
@@ -172,7 +218,7 @@ class ServingEngine:
         kv_dtype = self.cache["k"].dtype if "k" in self.cache \
             else self.cache["ssm_conv"].dtype
         one = self.model.init_cache(
-            1, self.max_seq, enc_seq=enc_seq, dtype=kv_dtype
+            1, self._cache_seq, enc_seq=enc_seq, dtype=kv_dtype
         )
         batch = {"tokens": jnp.asarray(toks)[None]}
         if self.model.cfg.kind in ("encdec", "audio"):
@@ -184,6 +230,12 @@ class ServingEngine:
         slot = self.kv.allocate(r)
         self.cache = _write_slot(self.cache, one, slot)
         self.slot_req[slot] = r
+        if self.spec_k:
+            # the draft holds committed[:-1] (speculative.py invariant): on a
+            # fresh prefill the first token is emitted just below, so `toks`
+            # is already that prefix; on recompute-resume drop the last
+            # committed token — it is the next proposal round's input.
+            self.draft.prefill(slot, toks if r.generated == 0 else toks[:-1])
         self._tick(self.lat.prefill_latency(len(toks)))
         if r.generated == 0:
             tok = int(jnp.argmax(logits[0]))
@@ -200,12 +252,43 @@ class ServingEngine:
         done = (r.generated >= r.output_len
                 or (self.eos_id >= 0 and tok == self.eos_id))
         if done:
-            r.state = ReqState.FINISHED
-            r.finish_time = self.now
-            self.sched.on_request_finish(r)
-            slot = r.engine_slot
-            self.kv.release(r)
-            self.slot_req.pop(slot, None)
+            self._finish(r)
+
+    def _emit_burst(self, r: Request, toks) -> int:
+        """Commit a verify step's accepted tokens: all visible at self.now
+        (one burst — FluidQoE.emit with k>1; pace_delivery re-smooths it
+        client-side). Truncates at output_len / EOS exactly where the
+        one-token-per-step baseline would have stopped. Returns the number
+        actually emitted."""
+        emitted = []
+        for tok in toks:
+            if r.generated >= r.output_len:
+                break
+            tok = int(tok)
+            emitted.append(tok)
+            r.output_tokens.append(tok)
+            r.generated += 1
+            r.emit_times.append(self.now)
+            if self.eos_id >= 0 and tok == self.eos_id:
+                break
+        if emitted:
+            self.fluid.emit(r.fluid_idx, self.now, len(emitted))
+            self.kv.grow(r, len(emitted))
+            self.total_tokens += len(emitted)
+        done = (r.generated >= r.output_len
+                or (self.eos_id >= 0 and emitted and
+                    emitted[-1] == self.eos_id))
+        if done:
+            self._finish(r)
+        return len(emitted)
+
+    def _finish(self, r: Request) -> None:
+        r.state = ReqState.FINISHED
+        r.finish_time = self.now
+        self.sched.on_request_finish(r)
+        slot = r.engine_slot
+        self.kv.release(r)
+        self.slot_req.pop(slot, None)
 
     # ------------------------------------------------------------ preempt
     def _preempt(self, r: Request) -> None:
@@ -214,7 +297,8 @@ class ServingEngine:
         slot = r.engine_slot
         if self.preemption_mode == "swap":
             host_slice = jax.device_get(_read_slot(self.cache, slot))
-            self.kv.swap_out(r, host_slice)
+            draft_slice = self.draft.park(slot) if self.spec_k else None
+            self.kv.swap_out(r, host_slice, draft_slice)
             r.state = ReqState.SWAPPED
             self._tick(self.lat.swap_latency(r.context_len))
         else:
@@ -226,13 +310,63 @@ class ServingEngine:
 
     def _swap_in(self, r: Request) -> None:
         host_slice = self.kv.swap_in(r)
+        draft_slice = self.kv.swap_in_draft(r)
         slot = self.kv.allocate(r)
         self.cache = _write_slot(
             self.cache, jax.tree.map(jnp.asarray, host_slice), slot
         )
+        if draft_slice is not None:
+            self.draft.restore(slot, draft_slice)
         self.slot_req[slot] = r
         r.state = ReqState.RUNNING
         self._tick(self.lat.swap_latency(r.context_len))
+
+    # ------------------------------------------------------- speculative
+    def _speculative_iteration(self, active, lengths, tokens,
+                               total_ctx: int) -> None:
+        """Draft-propose k tokens per running slot, verify the whole window
+        in one target pass, commit the longest greedy-matching prefix plus
+        the correction/bonus token (lossless; 1..k+1 tokens per step)."""
+        k = self.spec_k
+        # draft cache holds committed[:-1]; its next write goes one position
+        # below the target's (speculative.py invariant)
+        draft_lengths = np.maximum(lengths - 1, 0).astype(np.int32)
+        proposals = self.draft.propose(tokens, draft_lengths, k)
+        window = np.concatenate([tokens[:, None], proposals], axis=1)
+        logits, self.cache = self._verify(
+            self.params, jnp.asarray(window), self.cache
+        )
+        # one step's cost: k+1 draft decodes + the fused verify (the
+        # SpeculativeLatencyModel's iter_latency — same call as baseline)
+        self._tick(self.lat.iter_latency(len(active), total_ctx))
+        greedy = np.asarray(jnp.argmax(logits, axis=-1))    # (slots, k+1)
+        for s, r in list(active.items()):
+            d, g = window[s, 1:], greedy[s]
+            a = 0
+            while a < k and d[a] == g[a]:
+                a += 1
+            # logical max_seq bound: the cache slack (_cache_seq) makes
+            # every window position's logits well-defined, but committed
+            # context must never exceed what a baseline engine could hold
+            m_safe = max(1, self.max_seq - int(lengths[s]))
+            toks = (list(d[:a]) + [int(g[a])])[:m_safe]
+            self.spec_steps += 1
+            self.spec_proposed += k
+            self.spec_accepted += a
+            if hasattr(self.lat, "observe_acceptance"):
+                self.lat.observe_acceptance(a)
+            self._emit_burst(r, toks)
+
+    def spec_stats(self) -> dict:
+        """Acceptance-side counters (speculative engines only)."""
+        return {
+            "spec_k": self.spec_k,
+            "spec_steps": self.spec_steps,
+            "proposed": self.spec_proposed,
+            "accepted": self.spec_accepted,
+            "acceptance_rate": (self.spec_accepted / self.spec_proposed
+                                if self.spec_proposed else 0.0),
+        }
 
     # ----------------------------------------------------------- main loop
     def _admit_arrivals(self) -> None:
@@ -284,15 +418,19 @@ class ServingEngine:
             for s, r in active.items():
                 lengths[s] = r.context_len
                 tokens[s] = r.output_tokens[-1] if r.output_tokens else 0
-            self.cache["length"] = jnp.asarray(lengths)
-            logits, self.cache = self._decode(
-                self.params, jnp.asarray(tokens), self.cache
-            )
+            self.cache = cache_lib.with_lengths(self.cache, lengths)
             total_ctx = int(lengths.sum())
-            self._tick(self.lat.iter_latency(len(active), total_ctx))
-            nxt = np.asarray(jnp.argmax(logits, axis=-1))
-            for s, r in list(active.items()):
-                self._emit(r, int(nxt[s]))
+            if self.spec_k:
+                self._speculative_iteration(active, lengths, tokens,
+                                            total_ctx)
+            else:
+                logits, self.cache = self._decode(
+                    self.params, jnp.asarray(tokens), self.cache
+                )
+                self._tick(self.lat.iter_latency(len(active), total_ctx))
+                nxt = np.asarray(jnp.argmax(logits, axis=-1))
+                for s, r in list(active.items()):
+                    self._emit(r, int(nxt[s]))
         else:
             self._tick(self.lat.hw.overhead)
 

@@ -7,6 +7,16 @@ fixed (L, B_slots, S_max, ...) pytree; this manager owns
   * token-granular accounting (the scheduler's knapsack weights / capacity M),
   * the request metadata store: swapped-out KV/state lives here as host
     numpy arrays (paper Fig. 6 step 3) until swap-in or recompute.
+
+Speculative engines keep a *second* device cache (the draft model's, same
+slot layout — serving/speculative.py); its parked slices ride alongside the
+target's in `draft_store`, keyed by the same rid, so a preempted request's
+two caches round-trip host RAM together and release together. Accounting
+stays in target-KV tokens (that is the scheduler's capacity M); the draft's
+proportional cost enters through SpeculativeLatencyModel's swap/prefill
+pricing instead. `burst_reserve` lets a speculative engine leave k+1 tokens
+of admission headroom per request, since one verify step can grow a request
+by up to k+1 tokens before the scheduler next runs.
 """
 from __future__ import annotations
 
@@ -20,20 +30,24 @@ from repro.serving.request import Request
 
 class KVSlotManager:
     def __init__(self, num_slots: int, max_seq: int,
-                 capacity_tokens: Optional[int] = None):
+                 capacity_tokens: Optional[int] = None,
+                 burst_reserve: int = 0):
         self.num_slots = num_slots
         self.max_seq = max_seq
         self.capacity_tokens = capacity_tokens or num_slots * max_seq
+        self.burst_reserve = burst_reserve
         self.free_slots: List[int] = list(range(num_slots))
         self.slot_of: Dict[int, int] = {}          # rid -> slot
         self.tokens_used = 0
         self.host_store: Dict[int, dict] = {}      # rid -> host pytree slice
+        self.draft_store: Dict[int, dict] = {}     # rid -> parked draft slice
         self.swap_bytes_total = 0
 
     # ---- allocation ---------------------------------------------------------
     def can_allocate(self, req: Request) -> bool:
         return (bool(self.free_slots)
-                and self.tokens_used + req.context_len <= self.capacity_tokens)
+                and self.tokens_used + req.context_len + self.burst_reserve
+                <= self.capacity_tokens)
 
     def allocate(self, req: Request) -> int:
         slot = self.free_slots.pop()
@@ -51,18 +65,28 @@ class KVSlotManager:
         self.free_slots.append(slot)
         self.tokens_used -= req.context_len
         req.engine_slot = -1
+        self.draft_store.pop(req.rid, None)
 
     # ---- preemption ---------------------------------------------------------
-    def swap_out(self, req: Request, host_slice: dict) -> None:
-        """Park a device slice (already fetched to host) and free the slot."""
+    def swap_out(self, req: Request, host_slice: dict,
+                 draft_slice: Optional[dict] = None) -> None:
+        """Park device slices (already fetched to host) and free the slot."""
+        self.release(req)                      # also clears any stale draft
         self.host_store[req.rid] = host_slice
         self.swap_bytes_total += sum(
             np.asarray(v).nbytes for v in jax.tree.leaves(host_slice)
         )
-        self.release(req)
+        if draft_slice is not None:
+            self.draft_store[req.rid] = draft_slice
+            self.swap_bytes_total += sum(
+                np.asarray(v).nbytes for v in jax.tree.leaves(draft_slice)
+            )
 
     def swap_in(self, req: Request) -> dict:
         return self.host_store.pop(req.rid)
+
+    def swap_in_draft(self, req: Request) -> Optional[dict]:
+        return self.draft_store.pop(req.rid, None)
 
     def drop(self, req: Request) -> None:
         """Recompute-style preemption: nothing parked, slot freed."""

@@ -6,13 +6,26 @@ proves preempted requests finish with the right tokens end-to-end; these
 tests pin the mechanism itself — the KV/state slice that comes back from
 host RAM is *bit-identical* to what was parked, the slot/token accounting
 balances on both sides, and the recompute path genuinely drops state.
+
+The speculative tests extend the same pins to the draft cache: a preempted
+speculative request parks *two* slices (target + draft, same rid, same
+slot decision), both must round-trip host RAM bit-identically — including
+the stale rejected-proposal entries beyond the committed frontier, which
+the length gate makes inert — and the resumed request must continue the
+exact token sequence.
 """
 import jax
 import numpy as np
 import pytest
 
 from repro.configs import get_smoke_config
-from repro.core import LatencyModel, QoESpec, TPU_V5E, make_scheduler
+from repro.core import (
+    LatencyModel,
+    QoESpec,
+    SpeculativeLatencyModel,
+    TPU_V5E,
+    make_scheduler,
+)
 from repro.models import Model
 from repro.serving import Request, ReqState, ServingEngine
 from repro.serving.engine import _read_slot
@@ -152,6 +165,136 @@ def test_recompute_resumes_token_exact(llama):
     assert r.generated >= r.output_len
     assert r.output_tokens == ref.output_tokens
     assert eng.kv.tokens_used == 0           # everything released
+
+
+# ---------------------------------------------------------------------------
+# Preemption under speculation: both caches round-trip, mid-proposal
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def spec_setup(llama):
+    """Target + a perturbed-params draft (partial, context-dependent
+    acceptance — so preemption happens with rejected-proposal junk parked
+    beyond the committed frontier, the 'mid-proposal' state)."""
+    cfg, m, params = llama
+    draft_params = jax.tree.map(
+        lambda a: a + 1e-3 * jax.random.normal(
+            jax.random.PRNGKey(9), a.shape, a.dtype), params
+    )
+    return cfg, m, params, m, draft_params
+
+
+def mk_spec_engine(spec_setup, mode="swap", k=2):
+    cfg, m, params, dm, dparams = spec_setup
+    lat = SpeculativeLatencyModel(cfg, TPU_V5E, dm.cfg, k=k)
+    sched = make_scheduler("fcfs", 10_000, lat)
+    return ServingEngine(m, params, sched, lat, num_slots=4, max_seq=64,
+                         preemption_mode=mode,
+                         draft_model=dm, draft_params=dparams, spec_k=k)
+
+
+def test_spec_swap_roundtrip_preserves_both_kv(spec_setup):
+    """Swap out a speculative request mid-proposal: the parked target AND
+    draft slices are bit-identical to what was on device — including stale
+    rejected-draft entries past the committed length — and both come back
+    bit-identical on swap-in."""
+    cfg = spec_setup[0]
+    rng = np.random.default_rng(10)
+    eng = mk_spec_engine(spec_setup, mode="swap")
+    r = mk_req(cfg, rng, out_len=20, plen=12)
+    slot = start_running(eng, r)
+    assert eng.spec_steps > 0            # verify iterations actually ran
+
+    before_t = jax.device_get(_read_slot(eng.cache, slot))
+    before_d = eng.draft.park(slot)
+    used_before = eng.kv.tokens_used
+
+    eng._preempt(r)
+    assert r.state == ReqState.SWAPPED
+    assert eng.kv.tokens_used == used_before - r.context_len
+    assert tree_equal(eng.kv.host_store[r.rid], before_t)
+    assert tree_equal(eng.kv.draft_store[r.rid], before_d)
+
+    eng._swap_in(r)
+    assert r.rid not in eng.kv.host_store
+    assert r.rid not in eng.kv.draft_store
+    assert eng.kv.tokens_used == used_before
+    new_slot = r.engine_slot
+    assert tree_equal(jax.device_get(_read_slot(eng.cache, new_slot)),
+                      before_t)
+    assert tree_equal(eng.draft.park(new_slot), before_d)
+
+
+def test_spec_swapped_resumes_token_exact(spec_setup):
+    """After a forced swap round-trip mid-proposal, the speculative engine
+    finishes with exactly the tokens an undisturbed baseline produces."""
+    cfg, m, params, _, _ = spec_setup
+    rng = np.random.default_rng(11)
+
+    ref = mk_req(cfg, rng, out_len=18, plen=12)
+    lat = LatencyModel(cfg, TPU_V5E)
+    ref_eng = ServingEngine(m, params, make_scheduler("fcfs", 10_000, lat),
+                            lat, num_slots=4, max_seq=64)
+    ref_eng.run([ref], max_iterations=100)
+
+    eng = mk_spec_engine(spec_setup, mode="swap")
+    r = Request(rid=ref.rid, arrival=0.0, prompt_len=ref.prompt_len,
+                output_len=ref.output_len, spec=ref.spec,
+                prompt_tokens=ref.prompt_tokens)
+    start_running(eng, r)
+    eng._preempt(r)
+    while eng.step():                    # swap back in and finish
+        pass
+    assert r.generated >= r.output_len
+    assert r.output_tokens == ref.output_tokens
+
+
+def test_spec_recompute_matches_nonspec_recompute(spec_setup):
+    """Recompute-mode differential: re-prefill rebuilds the cache in
+    prefill layout, whose logits may legitimately flip near-tie argmaxes
+    vs the stepwise layout (a pre-existing engine property — see
+    test_recompute_resumes_token_exact, which passes only because its
+    trace is argmax-robust). The invariant speculation must preserve is
+    therefore *equivalence with the non-speculative engine preempted at
+    the same point*: same committed prefix dropped and re-prefilled, same
+    continuation."""
+    cfg, m, params, _, _ = spec_setup
+    rng = np.random.default_rng(12)
+    proto = mk_req(cfg, rng, out_len=18, plen=12)
+    lat = LatencyModel(cfg, TPU_V5E)
+
+    # speculative engine: run to mid-stream, force recompute preemption
+    eng = mk_spec_engine(spec_setup, mode="recompute")
+    r_spec = Request(rid=proto.rid, arrival=0.0, prompt_len=proto.prompt_len,
+                     output_len=proto.output_len, spec=proto.spec,
+                     prompt_tokens=proto.prompt_tokens)
+    eng.submit(r_spec)
+    while r_spec.generated < 6:
+        assert eng.step()
+    cut = r_spec.generated               # bursts may overshoot 6
+    eng._preempt(r_spec)
+    assert not r_spec.prefilled and r_spec.rid not in eng.kv.draft_store
+    while eng.step():
+        pass
+
+    # non-spec engine preempted at the *same* generated count
+    ref_eng = ServingEngine(m, params, make_scheduler("fcfs", 10_000, lat),
+                            lat, num_slots=4, max_seq=64,
+                            preemption_mode="recompute")
+    r_ref = Request(rid=proto.rid, arrival=0.0, prompt_len=proto.prompt_len,
+                    output_len=proto.output_len, spec=proto.spec,
+                    prompt_tokens=proto.prompt_tokens)
+    ref_eng.submit(r_ref)
+    while r_ref.generated < cut:
+        assert ref_eng.step()
+    assert r_ref.generated == cut        # 1 token/step: lands exactly
+    assert r_ref.output_tokens == r_spec.output_tokens[:cut]
+    ref_eng._preempt(r_ref)
+    while ref_eng.step():
+        pass
+
+    assert r_spec.generated >= r_spec.output_len
+    assert r_spec.output_tokens == r_ref.output_tokens
 
 
 def test_double_swap_roundtrip(llama):

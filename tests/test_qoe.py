@@ -143,6 +143,75 @@ def test_fluid_predict_serve_beats_wait():
     assert q_serve > q_wait
 
 
+# ---------------------------------------------------------------------------
+# Burst emission (speculative decoding: one verify step emits k tokens)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 6), st.floats(0.1, 10.0), st.floats(1.0, 10.0),
+       st.floats(0.5, 20.0))
+@settings(max_examples=60, deadline=None)
+def test_burst_emit_equals_unit_emits(k, t, dt, tds):
+    """emit(idx, t, k) must leave the fluid state exactly where k unit
+    emits at the same instant would — including the first-token-immediate
+    release — and accrue the same actual area ever after."""
+    spec = QoESpec(ttft=1.0, tds=tds)
+    burst, units = FluidQoE(), FluidQoE()
+    i = burst.add(0.0, spec)
+    units.add(0.0, spec)
+    burst.emit(i, t, k)
+    for _ in range(k):
+        units.emit(i, t, 1)
+    for f in FluidQoE.FIELDS:
+        np.testing.assert_allclose(getattr(burst, f), getattr(units, f),
+                                   rtol=1e-12, err_msg=f)
+    burst.advance(t + dt)
+    units.advance(t + dt)
+    np.testing.assert_allclose(burst.s_act, units.s_act, rtol=1e-12)
+    np.testing.assert_allclose(burst.n_vis, units.n_vis, rtol=1e-12)
+
+
+@given(st.integers(2, 8), st.floats(0.0, 10.0), st.floats(0.5, 20.0))
+@settings(max_examples=60, deadline=None)
+def test_pacing_smooths_burst_to_spec_tds(k, t, tds):
+    """A k-token burst at time t is released by the client buffer at
+    exactly the spec'd TDS: first token immediately, then 1/tds apart."""
+    d = pace_delivery(np.full(k, t), tds)
+    np.testing.assert_allclose(d, t + np.arange(k) / tds, rtol=1e-12)
+
+
+def test_burst_qoe_equals_smooth_qoe_when_on_pace():
+    """Eq. 1 is evaluated on the *paced* delivery curve, so a server that
+    front-runs its pace in k-token bursts scores the same QoE as one
+    emitting perfectly smoothly — the property that makes burst delivery
+    (speculative decoding) QoE-neutral when throughput is sufficient."""
+    spec = QoESpec(ttft=1.0, tds=5.0)
+    l, k = 24, 4
+    smooth = spec.ttft + np.arange(l) / spec.tds
+    # same schedule, but tokens arrive k at a time at the burst head
+    burst = np.repeat(smooth[::k], k)[:l]
+    q_smooth = qoe_exact(smooth, 0.0, spec, response_len=l)
+    q_burst = qoe_exact(burst, 0.0, spec, response_len=l)
+    assert q_burst == pytest.approx(q_smooth)
+    assert q_burst == pytest.approx(1.0)
+
+
+def test_fluid_burst_vs_exact_on_bursty_stream():
+    """Fluid burst accounting tracks the exact metric on a k-at-a-time
+    emission pattern (the speculative engine's native output shape)."""
+    spec = QoESpec(ttft=1.0, tds=5.0)
+    k, n_bursts = 4, 25
+    times = 0.5 + np.arange(n_bursts) * (k / 5.0)
+    fl = FluidQoE()
+    i = fl.add(0.0, spec)
+    emits = []
+    for t in times:
+        fl.emit(np.array([i]), float(t), k)
+        emits.extend([t] * k)
+    q_fluid = fl.qoe_now(float(times[-1]))[i]
+    q_exact = qoe_exact(np.array(emits), 0.0, spec)
+    assert abs(q_fluid - q_exact) < 0.08
+
+
 def test_fluid_sufficiently_served_high_q_wait():
     """A request with a big client buffer should have high Q_wait (it is
     safe to preempt) vs a starving one (urgent)."""

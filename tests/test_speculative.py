@@ -1,0 +1,397 @@
+"""Speculative decoding: the lossless differential harness.
+
+The whole feature is pinned by one gate: for every trace and config, the
+speculative engine's per-request emitted token IDs are *identical* to the
+baseline engine's (greedy verification is lossless by construction), while
+decode steps shrink whenever proposals are accepted. The gate rests on a
+foundation asserted first: `Model.verify_step` (one fused window) is
+bit-identical to sequential `decode_step` calls — if an XLA version ever
+breaks that identity, the foundation test fails before the differentials
+get a chance to flake.
+
+Draft regimes exercised:
+  exact     draft params == target params  -> 100% acceptance (upper bound)
+  perturbed target params + 1e-3 noise     -> partial, context-dependent
+                                              acceptance (the real regime)
+  foreign   independently-initialized tiny model, same vocab -> ~0%
+            acceptance (adversarial draft; losslessness must still hold)
+
+The llama3-8b smoke config is used because its *untied* embeddings make
+random-init greedy chains wander through the vocab (tied embeddings
+collapse to a fixed-point token, which would make every draft trivially
+agree and the differential vacuous).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st  # hypothesis or fallback
+
+from repro.configs import get_smoke_config
+from repro.core import (
+    LatencyModel,
+    QoESpec,
+    SchedulerConfig,
+    SpeculativeLatencyModel,
+    TPU_V5E,
+    make_scheduler,
+)
+from repro.models import Model
+from repro.serving import Request, ServingEngine
+from repro.serving.speculative import check_speculation_compatible
+
+
+_CACHE = {}
+
+
+def _target():
+    # module-level cache rather than a fixture: the hypothesis-compat
+    # @given wrapper cannot take pytest fixtures as arguments
+    if "target" not in _CACHE:
+        cfg = get_smoke_config("llama3-8b")
+        m = Model(cfg)
+        _CACHE["target"] = (cfg, m, m.init(jax.random.PRNGKey(0)))
+    return _CACHE["target"]
+
+
+def _drafts():
+    """name -> (draft_model, draft_params); all share the target's vocab."""
+    if "drafts" not in _CACHE:
+        cfg, m, params = _target()
+        perturbed = jax.tree.map(
+            lambda a: a + 1e-3 * jax.random.normal(
+                jax.random.PRNGKey(9), a.shape, a.dtype), params
+        )
+        small_cfg = dataclasses.replace(
+            cfg, name="llama3-8b-smoke-draft", num_layers=1, d_model=128,
+            num_heads=4, num_kv_heads=2, d_ff=256,
+        )
+        small = Model(small_cfg)
+        _CACHE["drafts"] = {
+            "exact": (m, params),
+            "perturbed": (m, perturbed),
+            "foreign": (small, small.init(jax.random.PRNGKey(7))),
+        }
+    return _CACHE["drafts"]
+
+
+@pytest.fixture(scope="module")
+def target():
+    return _target()
+
+
+@pytest.fixture(scope="module")
+def drafts():
+    return _drafts()
+
+
+def mk_wl(cfg, rng, n, out_len=10, stagger=0.05, plen_lo=5, plen_hi=20):
+    wl = []
+    for i in range(n):
+        plen = int(rng.integers(plen_lo, plen_hi))
+        wl.append(Request(
+            rid=i, arrival=i * stagger, prompt_len=plen,
+            output_len=out_len, spec=QoESpec(ttft=1.0, tds=4.8),
+            prompt_tokens=rng.integers(0, cfg.vocab_size, plen),
+        ))
+    return wl
+
+
+def mk_baseline(target, sched="fcfs", cap=10_000, num_slots=4, max_seq=64,
+                sched_cfg=None, **kw):
+    cfg, m, params = target
+    lat = LatencyModel(cfg, TPU_V5E)
+    return ServingEngine(
+        m, params, make_scheduler(sched, cap, lat, sched_cfg), lat,
+        num_slots=num_slots, max_seq=max_seq, **kw,
+    )
+
+
+def mk_spec(target, draft, k, sched="fcfs", cap=10_000, num_slots=4,
+            max_seq=64, sched_cfg=None, **kw):
+    cfg, m, params = target
+    dm, dparams = draft
+    slat = SpeculativeLatencyModel(cfg, TPU_V5E, dm.cfg, k=k)
+    return ServingEngine(
+        m, params, make_scheduler(sched, cap, slat, sched_cfg), slat,
+        num_slots=num_slots, max_seq=max_seq,
+        draft_model=dm, draft_params=dparams, spec_k=k, **kw,
+    )
+
+
+def assert_tokens_identical(wl_a, wl_b):
+    for a, b in zip(wl_a, wl_b):
+        assert a.output_tokens == b.output_tokens, (
+            f"rid {a.rid}: {a.output_tokens} != {b.output_tokens}"
+        )
+        assert a.generated >= a.output_len
+
+
+# ---------------------------------------------------------------------------
+# Foundation: fused verify == sequential decode, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_verify_step_bitwise_matches_sequential_decode(target):
+    cfg, m, params = target
+    rng = np.random.default_rng(3)
+    B, S, T = 3, 64, 4
+    cache = m.init_cache(B, S, dtype=jnp.float32)
+    prompt = rng.integers(0, cfg.vocab_size, (B, 12))
+    _, cache = m.prefill(params, {"tokens": jnp.asarray(prompt)}, cache)
+    window = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, T)), jnp.int32)
+
+    fused_logits, fused_cache = jax.jit(m.verify_step)(params, window, cache)
+
+    step = jax.jit(m.decode_step)
+    seq_cache = cache
+    seq_logits = []
+    for j in range(T):
+        lg, seq_cache = step(params, window[:, j], seq_cache)
+        seq_logits.append(lg)
+    seq_logits = jnp.stack(seq_logits, axis=1)
+
+    np.testing.assert_array_equal(np.asarray(fused_logits),
+                                  np.asarray(seq_logits))
+    for a, b in zip(jax.tree.leaves(fused_cache), jax.tree.leaves(seq_cache)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_speculation_rejects_unsupported(target):
+    cfg, m, _ = target
+    ssm = Model(get_smoke_config("falcon-mamba-7b"))
+    with pytest.raises(ValueError, match="dense"):
+        check_speculation_compatible(m, ssm)
+    other_vocab = Model(dataclasses.replace(cfg, vocab_size=cfg.vocab_size * 2))
+    with pytest.raises(ValueError, match="vocab"):
+        check_speculation_compatible(m, other_vocab)
+
+
+# ---------------------------------------------------------------------------
+# The lossless differential gate
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("draft_name", ["exact", "perturbed", "foreign"])
+def test_spec_engine_matches_baseline_tokens(target, drafts, draft_name):
+    cfg, _, _ = target
+    rng = np.random.default_rng(1)
+    base_wl = mk_wl(cfg, rng, 4, out_len=10)
+    spec_wl = [r.clone() for r in base_wl]
+
+    base = mk_baseline(target)
+    base.run(base_wl, max_iterations=500)
+    spec = mk_spec(target, drafts[draft_name], k=3)
+    spec.run(spec_wl, max_iterations=500)
+
+    assert_tokens_identical(base_wl, spec_wl)
+    stats = spec.spec_stats()
+    # steps never increase; strictly fewer whenever anything was accepted
+    assert spec.iterations <= base.iterations
+    if stats["accepted"] > 0:
+        assert spec.iterations < base.iterations
+
+
+def test_draft_equals_target_is_full_acceptance(target, drafts):
+    """The degenerate draft==target case: every proposal verifies, so each
+    step commits exactly k+1 tokens (modulo end-of-request truncation) and
+    the step count collapses by ~(k+1)x vs the PR 2 stepped oracle."""
+    cfg, _, _ = target
+    k = 3
+    rng = np.random.default_rng(2)
+    base_wl = mk_wl(cfg, rng, 3, out_len=12, stagger=0.0)
+    spec_wl = [r.clone() for r in base_wl]
+
+    base = mk_baseline(target)
+    base.run(base_wl, max_iterations=500)
+    spec = mk_spec(target, drafts["exact"], k=k)
+    spec.run(spec_wl, max_iterations=500)
+
+    assert_tokens_identical(base_wl, spec_wl)
+    stats = spec.spec_stats()
+    assert stats["acceptance_rate"] == 1.0
+    assert spec.iterations < base.iterations
+    # 12 tokens = 1 at prefill + 11 decoded; at k+1=4/step that is 3 steps
+    decode_steps = [int(np.ceil((r.output_len - 1) / (k + 1)))
+                    for r in spec_wl]
+    assert spec.iterations == max(decode_steps)
+
+
+def test_spec_k0_reduces_to_stepped_oracle(target):
+    """k=0 disables speculation entirely: the engine must be the PR 2
+    stepped engine bit-for-bit (emission timestamps and QoE included)."""
+    cfg, _, _ = target
+    rng = np.random.default_rng(4)
+    base_wl = mk_wl(cfg, rng, 3, out_len=8)
+    k0_wl = [r.clone() for r in base_wl]
+
+    base = mk_baseline(target)
+    base.run(base_wl, max_iterations=500)
+    k0 = mk_baseline(target, spec_k=0)
+    k0.run(k0_wl, max_iterations=500)
+
+    for a, b in zip(base_wl, k0_wl):
+        assert a.output_tokens == b.output_tokens
+        assert a.emit_times == b.emit_times
+        assert a.final_qoe() == b.final_qoe()
+    assert base.iterations == k0.iterations
+    assert base.now == k0.now
+
+
+@given(st.integers(1, 4), st.integers(0, 10_000), st.integers(6, 14))
+@settings(max_examples=5, deadline=None)
+@pytest.mark.slow
+def test_spec_lossless_property(k, seed, out_len):
+    """Property form of the gate: any k, any trace, any draft regime —
+    token streams identical, steps never more."""
+    target = _target()
+    cfg, _, _ = target
+    rng = np.random.default_rng(seed)
+    draft = _drafts()[("exact", "perturbed", "foreign")[seed % 3]]
+    base_wl = mk_wl(cfg, rng, 3, out_len=out_len,
+                    stagger=float(rng.uniform(0.0, 0.2)))
+    spec_wl = [r.clone() for r in base_wl]
+
+    base = mk_baseline(target)
+    base.run(base_wl, max_iterations=500)
+    spec = mk_spec(target, draft, k=k)
+    spec.run(spec_wl, max_iterations=500)
+
+    assert_tokens_identical(base_wl, spec_wl)
+    assert spec.iterations <= base.iterations
+    if spec.spec_stats()["accepted"] > 0:
+        assert spec.iterations < base.iterations
+
+
+def test_spec_rerun_is_reproducible(target, drafts):
+    """run() promises reset-to-fresh semantics; the acceptance EMA lives
+    in the SpeculativeLatencyModel (shared with the scheduler), so reset()
+    must restore it to its prior — otherwise a second run() on the same
+    engine clocks (and therefore schedules) differently than the first."""
+    cfg, _, _ = target
+    rng = np.random.default_rng(14)
+    proto = mk_wl(cfg, rng, 3, out_len=10)
+    spec = mk_spec(target, drafts["perturbed"], k=3)
+
+    runs = []
+    for _ in range(2):
+        wl = [r.clone() for r in proto]
+        spec.run(wl, max_iterations=500)
+        runs.append(([r.output_tokens for r in wl],
+                     [r.emit_times for r in wl], spec.now))
+    assert runs[0] == runs[1]
+
+
+def test_spec_lossless_at_max_seq_boundary(target, drafts):
+    """Requests whose context walks right up to max_seq: verify windows
+    cross the boundary on the final steps, where the engine's padded
+    physical cache (max_seq + k + 1) must keep every window write
+    unclamped and the m_safe cap must stop emission exactly at the
+    logical max_seq — token identity with the baseline throughout."""
+    cfg, _, _ = target
+    max_seq = 48
+    for draft_name, k in (("exact", 3), ("perturbed", 4)):
+        rng = np.random.default_rng(13)
+        proto = []
+        for i, plen in enumerate((max_seq - 14, max_seq - 15)):
+            proto.append(Request(
+                rid=i, arrival=0.0, prompt_len=plen, output_len=14,
+                spec=QoESpec(ttft=1.0, tds=4.8),
+                prompt_tokens=rng.integers(0, cfg.vocab_size, plen),
+            ))
+        base_wl = [r.clone() for r in proto]
+        base = mk_baseline(target, max_seq=max_seq)
+        base.run(base_wl, max_iterations=200)
+        spec_wl = [r.clone() for r in proto]
+        spec = mk_spec(target, drafts[draft_name], k=k, max_seq=max_seq)
+        spec.run(spec_wl, max_iterations=200)
+        assert_tokens_identical(base_wl, spec_wl)
+        for r in spec_wl:
+            assert r.prompt_len + r.generated <= max_seq
+
+
+# ---------------------------------------------------------------------------
+# Memory pressure: losslessness must survive preemption
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_spec_preemption_pressure_token_identity(target, drafts):
+    """Andes scheduler + tiny KV budget: requests get preempted (and with
+    them, their draft caches) mid-stream; the committed token streams must
+    still equal an uncontended baseline run's.
+
+    Swap mode only: swap restores bit-identical cache slices, so token
+    identity through arbitrary organic preemption is a hard guarantee.
+    Recompute rebuilds the cache in prefill layout (no position gap), whose
+    logits can legitimately flip near-tie argmaxes vs the stepwise layout —
+    a pre-existing engine property, independent of speculation; the
+    recompute differential therefore pins spec against a non-spec engine
+    preempted at the *same* point instead
+    (test_engine_preemption.py::test_spec_recompute_matches_nonspec_recompute).
+    """
+    mode = "swap"
+    cfg, _, _ = target
+    rng = np.random.default_rng(5)
+    wl_proto = mk_wl(cfg, rng, 8, out_len=15, stagger=0.01)
+
+    base_wl = [r.clone() for r in wl_proto]
+    base = mk_baseline(target, num_slots=8)
+    base.run(base_wl, max_iterations=2000)
+
+    spec_wl = [r.clone() for r in wl_proto]
+    spec = mk_spec(target, drafts["perturbed"], k=2, sched="andes",
+                   cap=100, num_slots=2,
+                   sched_cfg=SchedulerConfig(delta_t=5.0),
+                   capacity_tokens=100, preemption_mode=mode)
+    spec.run(spec_wl, max_iterations=4000)
+
+    assert spec.preemptions > 0, "test requires contention"
+    assert_tokens_identical(base_wl, spec_wl)
+    # everything released on drain, draft parking included
+    assert spec.kv.tokens_used == 0
+    assert not spec.kv.host_store and not spec.kv.draft_store
+
+
+# ---------------------------------------------------------------------------
+# Fleet: speculative replicas in the cluster layer
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_cluster_speculative_and_mixed_fleet(target, drafts):
+    """A 2-replica fleet of speculative engines — and a mixed spec/non-spec
+    fleet — serve one trace; every request's token stream matches the bare
+    baseline engine's (weights are shared, so placement cannot change
+    tokens), and the spec fleet does it in fewer engine steps."""
+    from repro.cluster import (
+        ClusterConfig, ClusterSimulator, engine_backend, mixed_backends,
+        speculative_backend,
+    )
+
+    cfg, m, params = target
+    dm, dparams = drafts["perturbed"]
+    lat = LatencyModel(cfg, TPU_V5E)
+    rng = np.random.default_rng(6)
+    wl_proto = mk_wl(cfg, rng, 8, out_len=8, stagger=0.1)
+
+    ref_wl = [r.clone() for r in wl_proto]
+    ref = mk_baseline(target, num_slots=8)
+    ref.run(ref_wl, max_iterations=2000)
+    ref_tokens = {r.rid: r.output_tokens for r in ref_wl}
+
+    spec_factory = speculative_backend(
+        m, params, dm, dparams, spec_k=2, num_slots=4, max_seq=64,
+        capacity_tokens=200,
+    )
+    plain_factory = engine_backend(
+        m, params, num_slots=4, max_seq=64, capacity_tokens=200,
+    )
+    for factory in (spec_factory,
+                    mixed_backends([spec_factory, plain_factory])):
+        res = ClusterSimulator(lat, ClusterConfig(
+            n_replicas=2, router="round_robin", kv_capacity_tokens=200,
+            backend_factory=factory,
+        )).run([r.clone() for r in wl_proto])
+        assert len(res.admitted) == len(wl_proto)
+        for r in res.admitted:
+            assert r.generated >= r.output_len
+            assert r.output_tokens == ref_tokens[r.rid], r.rid
