@@ -1,8 +1,9 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-slow bench bench-cluster bench-cluster-engine \
-        bench-spec example-cluster example-cluster-engine
+.PHONY: test test-fast test-slow bench bench-api bench-cluster \
+        bench-cluster-engine bench-spec example-quickstart example-cluster \
+        example-cluster-engine
 
 # ---- test tiers -----------------------------------------------------------
 # tier-1  (make test-fast): everything NOT marked `slow` — the ROADMAP.md
@@ -30,6 +31,10 @@ bench:
 bench-cluster:
 	$(PYTHON) -m benchmarks.cluster_qoe --out cluster_qoe.json
 
+# the same sweep through the unified serving API (repro.api.ServingClient
+# drives every backend; bit-identical to direct driving per tests/test_api.py)
+bench-api: bench-cluster
+
 # engine-backed mode: real-model replicas cross-checked against the sim fleet
 bench-cluster-engine:
 	$(PYTHON) -m benchmarks.cluster_qoe --engine
@@ -38,6 +43,9 @@ bench-cluster-engine:
 # vs the baseline engine on one trace
 bench-spec:
 	$(PYTHON) -m benchmarks.cluster_qoe --speculative
+
+example-quickstart:
+	$(PYTHON) examples/quickstart.py
 
 example-cluster:
 	$(PYTHON) examples/serve_cluster.py

@@ -11,6 +11,11 @@ round-robin. A second section shows admission control degrading gracefully
 under deep surge (§6.4 fleet-wide): shedding/deferring negative-gain
 requests lifts the QoE of everyone actually served.
 
+Every sweep drives its backend — fleet, bare engine, or speculative
+engine — through the unified `repro.api.ServingClient` (the `_serve`
+helper), the same submit/stream surface as the examples; `make bench-api`
+runs the default sweep as a one-liner.
+
 Run via `python -m benchmarks.run --only cluster` (CSV rows, like every
 figure module) or `python -m benchmarks.cluster_qoe [--out cluster.json]`
 for a standalone JSON dump. `--engine` cross-checks real-model replicas
@@ -22,6 +27,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.api import ServingClient
 from repro.configs import get_config
 from repro.core import A40_4X, A100_4X, LatencyModel
 from repro.cluster import AdmissionConfig, ClusterConfig, ClusterSimulator
@@ -40,6 +46,13 @@ def _lat_models():
     return [LatencyModel(cfg, A100_4X), LatencyModel(cfg, A40_4X)]
 
 
+def _serve(backend, wl):
+    """Drive any backend (fleet or bare engine) through the unified
+    client (repro.api) — bit-identical to driving the backend directly
+    (tests/test_api.py)."""
+    return ServingClient(backend).serve(wl)
+
+
 def _run_point(router: str, n_replicas: int, rate: float, cv: float,
                seed: int, n: int):
     cfg = ClusterConfig(
@@ -48,7 +61,7 @@ def _run_point(router: str, n_replicas: int, rate: float, cv: float,
         kv_capacity_tokens=KV_PER_REPLICA,
     )
     wl = make_workload(n, rate, seed=seed, arrival="gamma", cv=cv)
-    return ClusterSimulator(_lat_models(), cfg).run(wl)
+    return _serve(ClusterSimulator(_lat_models(), cfg), wl)
 
 
 def _router_sweep(quick: bool):
@@ -92,7 +105,7 @@ def _admission_sweep(quick: bool):
             admission=AdmissionConfig(policy=policy),
         )
         wl = make_workload(n, 20.0, seed=2, arrival="gamma", cv=3.0)
-        res = ClusterSimulator(lat, cfg).run(wl)
+        res = _serve(ClusterSimulator(lat, cfg), wl)
         served_qoe[policy] = res.avg_qoe(include_shed=False)
         rows.append({
             "name": f"cluster/admission/{policy}",
@@ -154,13 +167,14 @@ def _engine_sweep(quick: bool):
     for router in ("round_robin", "qoe"):
         common = dict(n_replicas=2, router=router,
                       kv_capacity_tokens=cap)
-        res_sim = ClusterSimulator(lat, ClusterConfig(**common)).run(clone())
-        res_eng = ClusterSimulator(lat, ClusterConfig(
+        res_sim = _serve(ClusterSimulator(lat, ClusterConfig(**common)),
+                         clone())
+        res_eng = _serve(ClusterSimulator(lat, ClusterConfig(
             **common,
             backend_factory=engine_backend(
                 model_obj, params, num_slots=num_slots, max_seq=max_seq,
                 capacity_tokens=cap),
-        )).run(clone())
+        )), clone())
         qoe_sim = {r.rid: r.final_qoe() for r in res_sim.admitted}
         qoe_eng = {r.rid: r.final_qoe() for r in res_eng.admitted}
         ttft_sim = {r.rid: r.final_ttft() for r in res_sim.admitted}
@@ -228,8 +242,7 @@ def _speculative_sweep(quick: bool):
         model_obj, params, make_scheduler("andes", 400, lat), lat,
         num_slots=6, max_seq=96, capacity_tokens=400,
     )
-    base.run(base_wl, max_iterations=5000)
-    base_res = base.result()
+    base_res = _serve(base, base_wl)
     base_tokens = {r.rid: r.output_tokens for r in base_wl}
 
     rows = [{
@@ -247,8 +260,7 @@ def _speculative_sweep(quick: bool):
                 num_slots=6, max_seq=96, capacity_tokens=400,
                 draft_model=model_obj, draft_params=dparams, spec_k=k,
             )
-            eng.run(spec_wl, max_iterations=5000)
-            res = eng.result()
+            res = _serve(eng, spec_wl)
             stats = eng.spec_stats()
             lossless = all(r.output_tokens == base_tokens[r.rid]
                            for r in spec_wl)

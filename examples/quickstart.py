@@ -1,60 +1,65 @@
-"""Quickstart: the Andes QoE pipeline in ~60 lines.
+"""Quickstart: the Andes user timeline, through the unified serving API.
 
-1. Define a request's QoE expectation (TTFT + TDS).
-2. Serve a small real model with the Andes scheduler under contention.
-3. Watch the client-side token buffer pace delivery and compute Eq.1 QoE.
+The paper defines Quality-of-Experience on the USER's timeline (§4):
+first token promptly (TTFT), then tokens at a digestible pace (TDS), with
+a client-side buffer (§5) re-smoothing server burstiness. `ServingClient`
+is that abstraction as an API:
+
+1. Submit a prompt with a QoE expectation (+ optional SLO contract).
+2. Iterate the returned StreamHandle: each TokenEvent carries the server
+   emit time AND the buffer-paced time the user actually sees it.
+3. Read Eq. 1 QoE / TTFT off the handle when the stream ends.
+
+The same client fronts the discrete-event simulator, this real JAX model
+engine, its speculative variant, or a whole multi-replica cluster
+(examples/serve_cluster.py).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import numpy as np
 
+from repro.api import ServingClient, SLOContract, SubmitOptions
 from repro.configs import get_smoke_config
-from repro.core import (
-    LatencyModel,
-    QoESpec,
-    SchedulerConfig,
-    TPU_V5E,
-    TokenBuffer,
-    make_scheduler,
-)
+from repro.core import LatencyModel, QoESpec, TPU_V5E, make_scheduler
 from repro.models import Model
-from repro.serving import Request, ServingEngine
+from repro.serving import ServingEngine
 
-# --- 1. a tiny Llama-family model ------------------------------------------
+# --- 1. a tiny Llama-family model behind the Andes scheduler ----------------
 cfg = get_smoke_config("llama3-8b")
 model = Model(cfg)
 params = model.init(jax.random.PRNGKey(0))
 lat = LatencyModel(cfg, TPU_V5E)
+engine = ServingEngine(model, params,
+                       make_scheduler("andes", kv_capacity=160, lat=lat),
+                       lat, num_slots=3, max_seq=64, capacity_tokens=160)
 
-# --- 2. a burst of requests with reading-speed QoE expectations -------------
+# --- 2. one client session; a burst of prompts with QoE expectations --------
+client = ServingClient(engine)
 rng = np.random.default_rng(0)
-requests = []
+reading = QoESpec(ttft=1.0, tds=4.8)          # 1 s first token, reading pace
+handles = []
 for i in range(8):
-    plen = int(rng.integers(8, 24))
-    requests.append(Request(
-        rid=i,
-        arrival=i * 0.02,                      # bursty arrivals
-        prompt_len=plen,
-        output_len=16,
-        spec=QoESpec(ttft=1.0, tds=4.8),       # 1s first token, 4.8 tok/s
-        prompt_tokens=rng.integers(0, cfg.vocab_size, plen),
+    prompt = rng.integers(0, cfg.vocab_size, int(rng.integers(8, 24)))
+    handles.append(client.submit(
+        prompt,
+        SubmitOptions(
+            spec=reading, max_tokens=16, arrival=i * 0.02,  # bursty arrivals
+            # a per-tenant SLO contract: what "served well" means, and how
+            # much this tenant's QoE weighs in fleet pricing
+            contract=SLOContract(ttft_target=2.0, qoe_floor=0.9, weight=1.0),
+        ),
+        on_preempt=lambda h, t: print(
+            f"   (req {h.rid} preempted at t={t:.2f}s)"),
     ))
 
-# --- 3. Andes: QoE-aware preemptive scheduling over limited KV --------------
-scheduler = make_scheduler("andes", kv_capacity=160, lat=lat,
-                           cfg=SchedulerConfig())
-engine = ServingEngine(model, params, scheduler, lat,
-                       num_slots=3, max_seq=64, capacity_tokens=160)
-done = engine.run(requests)
-
-# --- 4. client-side token buffer + Eq.1 QoE ---------------------------------
-print(f"{'req':>4} {'TTFT':>6} {'QoE':>6}  delivery (buffer-paced, s)")
-for r in done:
-    buf = TokenBuffer(r.spec.tds)
-    shown = [round(buf.push(t), 2) for t in r.emit_times]
-    print(f"{r.rid:>4} {r.final_ttft():6.2f} {r.final_qoe():6.2f}  "
+# --- 3. the user timeline: server emits vs buffer-paced visibility ----------
+print(f"{'req':>4} {'TTFT':>6} {'QoE':>6}  visible at (buffer-paced, s)")
+for h in handles:
+    shown = [round(ev.visible_time, 2) for ev in h]   # iterating drives
+    print(f"{h.rid:>4} {h.ttft():6.2f} {h.qoe():6.2f}  "
           f"{shown[:6]}{'...' if len(shown) > 6 else ''}")
-print(f"\navg QoE {np.mean([r.final_qoe() for r in done]):.3f} | "
+
+print(f"\navg QoE {client.avg_qoe():.3f} | "
       f"{engine.preemptions} preemptions | "
       f"{engine.total_tokens} tokens generated")

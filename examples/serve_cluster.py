@@ -1,8 +1,9 @@
-"""Cluster serving walkthrough: router, admission control, autoscaling.
+"""Cluster serving walkthrough: router, admission, autoscaling, contracts.
 
-Builds on examples/serve_qoe_comparison.py one level up: instead of one
-continuous-batching engine, a fleet of replicas (each running the paper's
-Andes scheduler) serves a bursty multi-tenant trace. Three vignettes:
+Builds on examples/quickstart.py one level up: the same `ServingClient`
+submit/stream surface, but the backend is a whole fleet of replicas (each
+running the paper's Andes scheduler) fed by a bursty multi-tenant trace.
+Four vignettes:
 
   1. Router shoot-out on a heterogeneous fleet (4xA100 + 4xA40): blind
      round-robin vs queue-feedback JSQ vs the QoE-aware router that prices
@@ -11,6 +12,8 @@ Andes scheduler) serves a bursty multi-tenant trace. Three vignettes:
      protects the QoE of everyone actually served (§6.4, fleet-wide).
   3. Autoscaling on the QoE-SLO signal: the fleet grows under a burst and
      drains back when it passes, finishing in-flight requests.
+  4. Per-tenant SLO contracts: a high-weight tenant buys shed-protection
+     under surge through the one QoE-pricing surface (core.pricing).
 
 Run:  PYTHONPATH=src python examples/serve_cluster.py
 """
@@ -18,6 +21,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.api import ServingClient, SLOContract
 from repro.configs import get_config
 from repro.core import A40_4X, A100_4X, LatencyModel
 from repro.cluster import (
@@ -33,13 +37,18 @@ A100 = LatencyModel(MODEL, A100_4X)
 A40 = LatencyModel(MODEL, A40_4X)
 
 
+def serve(lat, cfg, wl):
+    """One client session over a fleet: submit the trace, drain, report."""
+    return ServingClient(ClusterSimulator(lat, cfg)).serve(wl)
+
+
 def vignette_router():
     print("=== 1. Routers on a heterogeneous fleet (1x 4xA100 + 1x 4xA40) ===")
     wl_args = dict(n=400, rate=4.5, seed=1, arrival="gamma", cv=3.0)
     for router in ("round_robin", "jsq", "qoe"):
         cfg = ClusterConfig(n_replicas=2, router=router,
                             kv_capacity_tokens=40_000)
-        res = ClusterSimulator([A100, A40], cfg).run(make_workload(**wl_args))
+        res = serve([A100, A40], cfg, make_workload(**wl_args))
         per_rep = {rid: len(r.requests)
                    for rid, r in res.replica_results.items()}
         print(f"  {router:12s} avg QoE {res.avg_qoe():.3f}   "
@@ -57,7 +66,7 @@ def vignette_admission():
             admission=AdmissionConfig(policy=policy),
         )
         wl = make_workload(300, 20.0, seed=2, arrival="gamma", cv=3.0)
-        res = ClusterSimulator(A100, cfg).run(wl)
+        res = serve(A100, cfg, wl)
         print(f"  {policy:6s} served QoE {res.avg_qoe(include_shed=False):.3f}"
               f"   incl-shed {res.avg_qoe():.3f}"
               f"   shed {len(res.shed):3d}   defers {res.n_defer_events}")
@@ -75,16 +84,43 @@ def vignette_autoscaler():
         ),
     )
     wl = make_multitenant_workload(300, 8.0, seed=3, arrival="gamma", cv=3.0)
-    res = ClusterSimulator(A100, cfg).run(wl)
+    res = serve(A100, cfg, wl)
     print(f"  peak replicas {res.peak_replicas}, avg QoE {res.avg_qoe():.3f}, "
           f"per-tenant {{{', '.join(f'{k}: {v:.3f}' for k, v in res.per_tenant_avg_qoe().items())}}}")
     for e in res.scale_events:
         print(f"    t={e.t:7.1f}s  {e.action:10s}  replica {e.replica_id}")
     print("  (scale-ups after SLO dips + provision delay; drained replicas"
-          " finish their in-flight requests before retiring)")
+          " finish their in-flight requests before retiring)\n")
+
+
+def vignette_contracts():
+    print("=== 4. Per-tenant SLO contracts under surge (weight-priced admission) ===")
+    contracts = {
+        0: ("gold ", SLOContract(ttft_target=2.0, qoe_floor=0.9, weight=4.0)),
+        1: ("scrap", SLOContract(qoe_floor=0.5, weight=0.25)),
+    }
+    wl = make_workload(300, 25.0, seed=4, arrival="gamma", cv=3.0)
+    for i, r in enumerate(wl):
+        r.tenant = i % 2
+        r.contract = contracts[r.tenant][1]
+    cfg = ClusterConfig(
+        n_replicas=2, router="qoe", kv_capacity_tokens=8_000,
+        admission=AdmissionConfig(policy="shed"),
+    )
+    res = serve(A100, cfg, wl)
+    shed = {t: sum(r.tenant == t for r in res.shed) for t in contracts}
+    att = res.per_tenant_attainment(default_floor=0.9)
+    for t, (name, c) in contracts.items():
+        print(f"  {name} (weight {c.weight:4.2f})  shed {shed[t]:3d}   "
+              f"contract attainment {att[t]:.3f}")
+    print(f"  fleet contract-weighted attainment "
+          f"{res.contract_attainment():.3f}")
+    print("  (admission prices weight x marginal QoE gain: the gold tenant"
+          " is shed last, the scrap tier absorbs the surge)")
 
 
 if __name__ == "__main__":
     vignette_router()
     vignette_admission()
     vignette_autoscaler()
+    vignette_contracts()

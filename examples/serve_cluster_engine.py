@@ -17,6 +17,10 @@ clock) and emit real tokens. Three vignettes:
   3. a mixed fleet — replica 0 a real engine, replica 1 a simulator —
      serving one trace through one router.
 
+Every backend here — bare engine and fleets alike — is driven through
+the unified `repro.api.ServingClient` (one submit/stream surface;
+bit-identical to direct driving, tests/test_api.py).
+
 Run:  PYTHONPATH=src python examples/serve_cluster_engine.py
 """
 from __future__ import annotations
@@ -24,6 +28,7 @@ from __future__ import annotations
 import jax
 import numpy as np
 
+from repro.api import ServingClient
 from repro.configs import get_smoke_config
 from repro.core import LatencyModel, QoESpec, SchedulerConfig, TPU_V5E, make_scheduler
 from repro.core.request import Request
@@ -64,6 +69,11 @@ def clone(wl):
     return [r.clone() for r in wl]
 
 
+def serve(backend, wl):
+    """Drive any backend (bare engine or fleet) through one client."""
+    return ServingClient(backend).serve(wl)
+
+
 def engine_factory():
     return engine_backend(MODEL, PARAMS, num_slots=NUM_SLOTS,
                           max_seq=MAX_SEQ, capacity_tokens=CAP)
@@ -75,12 +85,12 @@ def vignette_invariance():
     bare = ServingEngine(
         MODEL, PARAMS, make_scheduler("andes", CAP, LAT, SchedulerConfig()),
         LAT, num_slots=NUM_SLOTS, max_seq=MAX_SEQ, capacity_tokens=CAP)
-    out = bare.run(clone(wl), max_iterations=3000)
+    out = sorted(serve(bare, clone(wl)).requests, key=lambda r: r.rid)
 
-    res = ClusterSimulator(LAT, ClusterConfig(
+    res = serve(ClusterSimulator(LAT, ClusterConfig(
         n_replicas=1, router="round_robin", kv_capacity_tokens=CAP,
         backend_factory=engine_factory(),
-    )).run(clone(wl))
+    )), clone(wl))
     routed = sorted(res.admitted, key=lambda r: r.rid)
     exact = all(a.emit_times == b.emit_times
                 and a.output_tokens == b.output_tokens
@@ -94,9 +104,10 @@ def vignette_sim_vs_engine_fleet():
     wl = mk_workload()
     common = dict(n_replicas=2, router="round_robin",
                   kv_capacity_tokens=CAP)
-    res_sim = ClusterSimulator(LAT, ClusterConfig(**common)).run(clone(wl))
-    res_eng = ClusterSimulator(LAT, ClusterConfig(
-        **common, backend_factory=engine_factory())).run(clone(wl))
+    res_sim = serve(ClusterSimulator(LAT, ClusterConfig(**common)),
+                    clone(wl))
+    res_eng = serve(ClusterSimulator(LAT, ClusterConfig(
+        **common, backend_factory=engine_factory())), clone(wl))
     t_sim = {r.rid: r.final_ttft() for r in res_sim.admitted}
     t_eng = {r.rid: r.final_ttft() for r in res_eng.admitted}
     dt = max(abs(t_sim[i] - t_eng[i]) for i in t_sim)
@@ -109,11 +120,11 @@ def vignette_sim_vs_engine_fleet():
 def vignette_mixed_fleet():
     print("=== 3. Mixed fleet: replica 0 real engine, replica 1 simulator ===")
     wl = mk_workload(n=30, rate=16.0, seed=5)
-    res = ClusterSimulator(LAT, ClusterConfig(
+    res = serve(ClusterSimulator(LAT, ClusterConfig(
         n_replicas=2, router="round_robin", kv_capacity_tokens=CAP,
         backend_factory=mixed_backends([engine_factory(),
                                         simulator_backend]),
-    )).run(clone(wl))
+    )), clone(wl))
     for rid, rres in sorted(res.replica_results.items()):
         kind = "engine" if rid % 2 == 0 else "sim"
         print(f"  replica {rid} ({kind:6s}): {len(rres.requests):3d} reqs, "

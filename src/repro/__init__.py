@@ -1,7 +1,10 @@
 """repro: Andes (QoE-aware LLM text streaming) as a multi-pod JAX framework.
 
 Public surface:
-    repro.core      — QoE metric, schedulers, latency model (the paper)
+    repro.api       — unified serving client: sessions, token streams,
+                      per-tenant SLO contracts over any backend
+    repro.core      — QoE metric, schedulers, QoE pricing, latency model
+                      (the paper)
     repro.serving   — engine, simulator, KV manager, requests
     repro.models    — 10-architecture model zoo behind one Model API
     repro.kernels   — Pallas TPU kernels + oracles

@@ -20,6 +20,14 @@ this package adds the fleet layer a production deployment needs on top:
                   signal; draining replicas finish in-flight requests.
   cluster_sim.py  ClusterSimulator — drives N replicas off one arrival
                   trace and reports fleet QoE (shed requests count as 0).
+                  Steppable (submit/step/result) since PR 4, so
+                  repro.api.ServingClient fronts a whole cluster through
+                  the same surface as a bare backend.
+
+All marginal-QoE-gain pricing (router placements, admission thresholds,
+autoscaler attainment) flows through repro.core.pricing — one QoEPricer
+surface shared with the in-replica scheduler knapsack; per-tenant
+SLOContracts weight it (Request.contract / Request.priority).
 
 A 1-replica cluster reproduces the single-node simulator bit-for-bit.
 """

@@ -6,15 +6,24 @@ requests should not be admitted at all — admitting a request whose own
 achievable QoE is lower than the QoE it destroys across the chosen
 replica's batch makes the *fleet total* worse (TokenFlow, arXiv
 2510.02758, makes the matching observation for burst preemption). The
-controller prices admission with the router's marginal-gain estimate:
+controller prices admission through the one QoEPricer surface
+(repro.core.pricing — the same implementation the scheduler knapsack and
+the router consume), contract-weighted per tenant:
 
-  gain = Q̂_new − Σ degradation of live requests      (router.marginal_qoe_gain)
+  gain = weight · Q̂_new − Σ degradation of live requests
 
   gain > min_gain           → admit
   gain ≤ min_gain, defer    → retry `defer_delay`s later (bounded retries;
                               the user keeps waiting, so their QoE clock —
                               Request.arrival — keeps running)
   gain ≤ min_gain, shed     → reject now (QoE 0, counted in fleet metrics)
+
+`weight` is the request's SLOContract/priority pricing weight
+(core.pricing.request_weight): a weight-2 tenant's achievable QoE counts
+double against the harm its admission does, so under surge the fleet
+sheds the low-weight tail first. Uncontracted traffic weighs 1.0, which
+reproduces the PR 1 uniform `min_gain` threshold bit-for-bit
+(tests/test_api.py pins the reduction).
 """
 from __future__ import annotations
 

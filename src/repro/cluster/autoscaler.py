@@ -24,6 +24,7 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.pricing import weighted_attainment
 from repro.cluster.replica import Replica
 
 SCALE_UP, SCALE_DOWN, REAP = "scale_up", "scale_down", "reap"
@@ -61,21 +62,26 @@ class Autoscaler:
 
     # ---------------------------------------------------------------- signal
     def signal(self, now: float, replicas: Sequence[Replica]) -> dict:
-        """Windowed fleet SLO attainment + instantaneous KV utilization."""
+        """Windowed fleet SLO attainment + instantaneous KV utilization.
+
+        Attainment is the contract-weighted fraction of recently finished
+        requests meeting their SLOContract (core.pricing.weighted_attainment
+        — the same pricing surface the scheduler/router/admission use);
+        `slo_threshold` is the QoE floor for uncontracted requests. With no
+        contracts this is exactly the uniform §6.1 attainment signal."""
         lo = now - self.cfg.window
-        qoes = []
+        finished = []
         for rep in replicas:
             for r in rep.backend.seen:
                 if not r.is_live and lo <= r.finish_time <= now:
-                    qoes.append(r.final_qoe())
-        attain = (float(np.mean([q >= self.cfg.slo_threshold for q in qoes]))
-                  if qoes else 1.0)
+                    finished.append(r)
+        attain = weighted_attainment(finished, self.cfg.slo_threshold)
         demand = sum(rep.kv_demand() for rep in replicas if not rep.draining)
         capacity = sum(rep.kv_capacity for rep in replicas if not rep.draining)
         return {
             "slo_attainment": attain,
             "kv_utilization": demand / max(capacity, 1),
-            "n_finished": len(qoes),
+            "n_finished": len(finished),
         }
 
     # -------------------------------------------------------------- decision

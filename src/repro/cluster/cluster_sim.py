@@ -13,6 +13,15 @@ A 1-replica cluster with admission and autoscaling off reproduces the
 single-node `ServingSimulator` token timeline bit-for-bit — the cluster
 layer only ever *adds* decisions around the engine, never changes it
 (regression-tested in tests/test_cluster.py).
+
+Like the simulator and engine, the cluster is *steppable*: `submit()`
+enqueues arrivals for routing, `step()` executes one fleet event (route
+the next queued arrival, or advance each busy replica one iteration once
+the queue is empty), and `result()` snapshots a ClusterResult. `run()` is
+a thin loop over them — which is what lets `repro.api.ServingClient`
+front a whole cluster through the same submit/stream surface as a bare
+backend (tests/test_api.py pins run() ≡ the pre-refactor monolithic loop
+bit-for-bit via the 1-replica invariance).
 """
 from __future__ import annotations
 
@@ -25,9 +34,10 @@ import numpy as np
 
 from repro.core.latency_model import LatencyModel
 from repro.core.objectives import fleet_slo_attainment
+from repro.core.pricing import weighted_attainment
 from repro.core.request import Request
 from repro.core.scheduler import SchedulerConfig, make_scheduler
-from repro.serving.simulator import ServingSimulator, SimConfig, SimResult
+from repro.serving.simulator import SimResult
 from repro.cluster.admission import ADMIT, DEFER, AdmissionConfig, AdmissionController
 from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig, ScaleEvent
 from repro.cluster.backends import BackendFactory, simulator_backend
@@ -106,6 +116,23 @@ class ClusterResult:
             acc.setdefault(r.tenant, []).append(0.0)
         return {k: float(np.mean(v)) for k, v in sorted(acc.items())}
 
+    def contract_attainment(self, default_floor: float = 0.9,
+                            include_shed: bool = True) -> float:
+        """Contract-weighted SLO attainment over the whole trace
+        (core.pricing.weighted_attainment; a shed request never emitted,
+        so it fails its contract and its weight counts against the fleet).
+        With no contracts this is the uniform QoE-floor attainment."""
+        reqs = self.admitted + (self.shed if include_shed else [])
+        return weighted_attainment(reqs, default_floor)
+
+    def per_tenant_attainment(self, default_floor: float = 0.9
+                              ) -> Dict[int, float]:
+        acc: Dict[int, List[Request]] = {}
+        for r in self.admitted + self.shed:
+            acc.setdefault(r.tenant, []).append(r)
+        return {k: weighted_attainment(v, default_floor)
+                for k, v in sorted(acc.items())}
+
 
 class ClusterSimulator:
     """`lat` may be a single LatencyModel (homogeneous fleet) or a sequence
@@ -131,11 +158,24 @@ class ClusterSimulator:
         self.autoscaler = (Autoscaler(self.cfg.autoscaler)
                            if self.cfg.autoscaler else None)
         self._rep_ids = itertools.count()
+        # lifecycle-event sink (repro.api): propagated to every replica
+        # backend, including ones the autoscaler provisions later. Set
+        # before the first replicas are built so they inherit it too.
+        self.event_sink = None
         self.replicas: List[Replica] = [
             self._new_replica(0.0) for _ in range(self.cfg.n_replicas)
         ]
         self.retired: List[Replica] = []
         self.peak_replicas = len(self.replicas)
+        # steppable state: routing queue of (route_at, tiebreak, request);
+        # deferred requests re-enter with a later route_at but keep their
+        # original arrival (their QoE clock started when the user hit enter)
+        self._queue: List = []
+        self._seq = itertools.count()
+        self.now = 0.0                    # fleet clock (last event time)
+        self.admitted: List[Request] = []
+        self.shed: List[Request] = []
+        self._finalized = False
 
     # ----------------------------------------------------------------- fleet
     def _new_replica(self, launched_at: float) -> Replica:
@@ -155,7 +195,18 @@ class ClusterSimulator:
         # the backend does, so the QoE router sees a speculative replica's
         # true expected-burst token rate. For stock factories sched.lat IS
         # the lat picked above, so nothing changes.
+        backend.event_sink = self.event_sink
         return Replica(rid, backend, sched.lat, launched_at=launched_at)
+
+    def set_event_sink(self, sink) -> None:
+        """Install a lifecycle-event sink on the fleet: every replica
+        backend (current and future) reports emit/preempt/finish events
+        through it, and the cluster itself reports shed/defer decisions.
+        This is how repro.api.ServingClient observes a whole cluster
+        through the same event stream as a bare backend."""
+        self.event_sink = sink
+        for rep in self.replicas + self.retired:
+            rep.backend.event_sink = sink
 
     def _advance_all(self, t: float) -> None:
         for rep in self.replicas:
@@ -179,55 +230,88 @@ class ClusterSimulator:
         self._reap_drained(t)
         self.peak_replicas = max(self.peak_replicas, len(self.replicas))
 
-    # ------------------------------------------------------------------- run
-    def run(self, workload: List[Request]) -> ClusterResult:
-        cfg = self.cfg
-        seq = itertools.count()
-        # heap of (route_at, tiebreak, request); deferred requests re-enter
-        # with a later route_at but keep their original arrival (their QoE
-        # clock started when the user hit enter)
-        queue = [(r.arrival, next(seq), r)
-                 for r in sorted(workload, key=lambda r: r.arrival)]
-        heapq.heapify(queue)
-        admitted: List[Request] = []
-        shed: List[Request] = []
+    # ----------------------------------------------------- incremental API
+    def submit(self, req: Request) -> None:
+        """Enqueue an arrival for routing at its arrival time. Re-arms the
+        end-of-trace cleanup so a second submit-then-drain round on the
+        same cluster finalizes again (interactive client sessions)."""
+        heapq.heappush(self._queue, (req.arrival, next(self._seq), req))
+        self._finalized = False
 
-        while queue:
-            route_at, _, req = heapq.heappop(queue)
-            self._advance_all(route_at)
-            self._autoscale(route_at)
-            routable = [r for r in self.replicas if not r.draining]
-            if not routable:
-                # fleet drained to nothing (e.g. min_replicas=0 during a
-                # lull): un-drain the newest replica, or provision a fresh
-                # one, rather than dropping traffic on the floor
-                if self.replicas:
-                    self.replicas[-1].draining = False
-                    routable = [self.replicas[-1]]
-                else:
-                    rep = self._new_replica(route_at)
-                    self.replicas.append(rep)
-                    self.peak_replicas = max(self.peak_replicas,
-                                             len(self.replicas))
-                    routable = [rep]
-            decision = self.router.route(req, routable, route_at)
-            action = self.admission.decide(req, decision, route_at)
-            if action == ADMIT:
-                decision.replica.submit(req)
-                admitted.append(req)
-            elif action == DEFER:
-                heapq.heappush(
-                    queue,
-                    (route_at + self.admission.cfg.defer_delay,
-                     next(seq), req),
-                )
+    @property
+    def has_work(self) -> bool:
+        return bool(self._queue) or any(rep.has_work for rep in self.replicas)
+
+    @property
+    def seen(self) -> List[Request]:
+        """Every request this cluster has decided on (admitted or shed)."""
+        return self.admitted + self.shed
+
+    def _route_next(self) -> None:
+        """Pop the next queued arrival, advance the fleet to it, and let
+        autoscaler → router → admission act (one routing event)."""
+        route_at, _, req = heapq.heappop(self._queue)
+        self.now = max(self.now, route_at)
+        self._advance_all(route_at)
+        self._autoscale(route_at)
+        routable = [r for r in self.replicas if not r.draining]
+        if not routable:
+            # fleet drained to nothing (e.g. min_replicas=0 during a
+            # lull): un-drain the newest replica, or provision a fresh
+            # one, rather than dropping traffic on the floor
+            if self.replicas:
+                self.replicas[-1].draining = False
+                routable = [self.replicas[-1]]
             else:
-                shed.append(req)
+                rep = self._new_replica(route_at)
+                self.replicas.append(rep)
+                self.peak_replicas = max(self.peak_replicas,
+                                         len(self.replicas))
+                routable = [rep]
+        decision = self.router.route(req, routable, route_at)
+        action = self.admission.decide(req, decision, route_at)
+        if action == ADMIT:
+            decision.replica.submit(req)
+            self.admitted.append(req)
+        elif action == DEFER:
+            heapq.heappush(
+                self._queue,
+                (route_at + self.admission.cfg.defer_delay,
+                 next(self._seq), req),
+            )
+            if self.event_sink is not None:
+                self.event_sink("defer", req, route_at, 0)
+        else:
+            self.shed.append(req)
+            if self.event_sink is not None:
+                self.event_sink("shed", req, route_at, 0)
 
-        # ---- drain: every replica finishes its in-flight work ------------
+    def step(self) -> bool:
+        """One fleet event: route the next queued arrival, or — once the
+        queue is empty — advance every busy replica by one iteration
+        (replicas are independent after routing, so per-replica outcomes
+        are identical to draining them one at a time). Returns False when
+        fully drained; the first False triggers the end-of-trace
+        autoscaler cleanup (cancel in-flight provisions, reap drained
+        replicas) exactly as the monolithic run() loop did."""
+        if self._queue:
+            self._route_next()
+            return True
+        progressed = False
         for rep in self.replicas + self.retired:
-            while rep.step():
-                pass
+            if rep.has_work and rep.step():
+                progressed = True
+        if progressed:
+            self.now = max([self.now]
+                           + [rep.clock for rep in self.replicas])
+            return True
+        self._finalize()
+        return False
+
+    def _finalize(self) -> None:
+        if self._finalized:
+            return
+        self._finalized = True
         if self.autoscaler is not None:
             # no more arrivals: cancel in-flight provisions (a replica that
             # comes up after the last request would serve nothing and only
@@ -239,6 +323,7 @@ class ClusterSimulator:
                         default=0.0)
             self._reap_drained(t_end)
 
+    def result(self) -> ClusterResult:
         all_reps = self.replicas + self.retired
         results = {rep.id: rep.result() for rep in all_reps}
         makespan = max(
@@ -246,11 +331,23 @@ class ClusterSimulator:
             default=0.0,
         )
         return ClusterResult(
-            admitted=admitted,
-            shed=shed,
+            admitted=list(self.admitted),
+            shed=list(self.shed),
             n_defer_events=self.admission.n_defer_events,
             makespan=makespan,
             replica_results=results,
             scale_events=list(self.autoscaler.events) if self.autoscaler else [],
             peak_replicas=self.peak_replicas,
         )
+
+    # ------------------------------------------------------------------- run
+    def run(self, workload: List[Request]) -> ClusterResult:
+        """Serve the workload to completion: a thin loop over submit() +
+        step(), preserving the pre-refactor monolithic loop's behavior
+        (same pop order — the (arrival, submit-order) heap key is a total
+        order — and the same post-trace autoscaler cleanup)."""
+        for r in sorted(workload, key=lambda r: r.arrival):
+            self.submit(r)
+        while self.step():
+            pass
+        return self.result()

@@ -40,11 +40,13 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional, Sequence
 
-import numpy as np
-
-from repro.core.qoe import predict_request_qoe
-from repro.core.request import Request, ReqState
+from repro.core import pricing
+from repro.core.pricing import request_weight, shared_token_rate  # noqa: F401
+from repro.core.request import Request
 from repro.cluster.replica import Replica
+
+# `shared_token_rate` moved to repro.core.pricing (the one QoEPricer
+# surface); re-exported above for existing callers.
 
 
 @dataclasses.dataclass
@@ -69,123 +71,29 @@ class RouteDecision:
     scores: Optional[dict] = None   # replica id -> score (qoe policy)
 
 
-def shared_token_rate(
-    lat,
-    n_live: int,
-    total_ctx: float,
-    kv_capacity: int,
-    state_equiv_tokens: int = 0,
-) -> float:
-    """Memory-capped, time-shared per-request decode rate (tokens/s).
-
-    A replica with more live requests than fit in KV memory cannot decode
-    them concurrently — the scheduler time-shares. The sustainable batch is
-    capped by memory (b_mem = M / avg KV weight); the aggregate token rate
-    at that batch is then split across *all* live requests. This is what
-    makes the marginal cost of one more request real on a saturated
-    replica (naive rate(b) vs rate(b+1) is near-zero at large b, which
-    would admit forever — the tragedy of the commons the admission
-    controller exists to prevent).
-    """
-    if n_live <= 0:
-        return 0.0
-    avg_ctx = total_ctx / n_live
-    avg_w = state_equiv_tokens if state_equiv_tokens else avg_ctx
-    b_mem = max(int(kv_capacity / max(avg_w, 1.0)), 1)
-    b_eff = min(n_live, b_mem)
-    agg = b_eff / lat.iter_latency(b_eff, int(b_eff * avg_ctx))
-    return agg / n_live
-
-
 def marginal_qoe_gain(
     replica: Replica,
     req: Request,
     now: float,
     cfg: RouterConfig,
 ) -> float:
-    """Predicted fleet QoE change of placing `req` on `replica` now.
+    """Predicted fleet QoE change of placing `req` on `replica` now:
 
-    gain = Q̂_new  +  Σ_live (Q̂_with − Q̂_without)
+      gain = weight · Q̂_new  −  Σ_live (Q̂_without − Q̂_with)
 
-    where Q̂_new is the newcomer's predicted fluid QoE (horizon Δt) and the
-    second term is the degradation of the replica's live requests. Two
-    harm channels are priced:
-
-      * rate sharing — one more mouth shares the memory-capped token
-        supply (shared_token_rate). Thanks to the paper's central slack
-        (generation speed ≫ digest speed) this alone rarely hurts;
-      * queueing — the newcomer's KV footprint pushes back the start time
-        of every *waiting* request. Per-request the extra delay is tiny,
-        but summed over a deep queue it outweighs the newcomer's own
-        achievable QoE. This is the term that turns the gain negative
-        under surge and makes admission control bite.
-
-    On an idle replica gain ≈ 1 (full QoE, nobody hurt); on a saturated
+    The math lives in repro.core.pricing.placement_gain — the same
+    implementation the scheduler knapsack and admission controller price
+    with. `weight` is the request's contract/priority pricing weight
+    (1.0 for uncontracted traffic — the PR 1 gain, bit-for-bit). On an
+    idle replica gain ≈ weight (full QoE, nobody hurt); on a saturated
     one it goes negative — the admission controller's shed signal.
     """
-    lat = replica.lat
-    live = replica.live
-    committed = replica.committed()      # live + routed-but-not-yet-admitted
-    b = len(committed)
-    ctx = sum(r.context_len for r in committed)
-    t = max(now, replica.clock)
-    dt = cfg.horizon
-    mean_out = replica.backend.sched.mean_output_len
-    st = replica.backend.sched.cfg.state_equiv_tokens
-    M = replica.kv_capacity
-
-    exp_new = max(mean_out, cfg.min_remaining_est)
-    demand = replica.kv_demand()
-    footprint = req.kv_tokens(st) + (0 if st else int(exp_new))
-
-    rate1 = shared_token_rate(lat, b + 1, ctx + req.prompt_len, M, st)
-    # KV-overcommit queueing delay before a waiting request starts: excess
-    # demand has to drain (at the aggregate token rate) before its KV fits
-    wait1 = max(demand + footprint - M, 0) / max(rate1 * (b + 1), 1e-9)
-    # prefill serialization: every committed-but-unprefilled request blocks
-    # the engine for its prefill before the newcomer's can run (non-chunked
-    # prefill, §2.2). During a burst this is the *leading* congestion
-    # signal — KV and rate terms only move once damage is already done —
-    # and it is hardware-aware (slow chips prefill slower).
-    prefill_backlog = sum(
-        lat.prefill_latency(r.context_len)
-        for r in committed if not r.prefilled
+    return pricing.placement_gain(
+        replica, req, now,
+        horizon=cfg.horizon,
+        min_remaining_est=cfg.min_remaining_est,
+        weight=request_weight(req),
     )
-
-    # -- degradation of the replica's live requests -------------------------
-    # (pending requests contribute to load above but have no fluid slot yet,
-    # so only live requests enter the degradation sum)
-    degradation = 0.0
-    if live:
-        rate0 = shared_token_rate(lat, b, ctx, M, st)
-        wait0 = max(demand - M, 0) / max(rate0 * b, 1e-9)
-        # compact copy of just the live slots (slots are grow-only; cloning
-        # the full state would make routing O(total requests) per query)
-        idx = np.array([r.fluid_idx for r in live])
-        fluid = replica.fluid.clone_slots(idx)
-        waiting = np.array([r.state != ReqState.RUNNING for r in live])
-        exp_len = fluid.emitted + np.maximum(
-            mean_out - fluid.emitted, cfg.min_remaining_est
-        )
-        d0 = np.where(waiting, wait0, 0.0)
-        d1 = np.where(waiting, wait1, 0.0)
-        q0 = fluid.predict_qoe(t, dt, rate0, delay=d0, exp_len=exp_len)
-        q1 = fluid.predict_qoe(t, dt, rate1, delay=d1, exp_len=exp_len)
-        degradation = float(np.sum(q0 - q1))
-
-    # -- the newcomer's own predicted QoE -----------------------------------
-    # The request's QoE clock runs from its *arrival* (Eq. 1), not from
-    # this routing instant: a deferred request re-enters with dead time on
-    # the clock, which must lower its achievable QoE here — otherwise every
-    # retry would be re-scored as fresh and over-admitted. Shifting both
-    # the delay and the horizon by `age` evaluates the same Eq. 1 window
-    # [arrival, arrival + age + Δt] with delivery starting at age + delay.
-    age = max(t - req.arrival, 0.0)
-    delay = wait1 + prefill_backlog + lat.prefill_latency(req.prompt_len)
-    q_new = predict_request_qoe(req.spec, age + delay, rate1, age + dt,
-                                exp_new)
-
-    return q_new - degradation
 
 
 class Router:

@@ -14,6 +14,15 @@ from repro.core.objectives import (
     fleet_min_qoe,
     fleet_slo_attainment,
 )
+from repro.core.pricing import (
+    QoEPricer,
+    SLOContract,
+    placement_gain,
+    request_weight,
+    shared_token_rate,
+    slo_attained,
+    weighted_attainment,
+)
 from repro.core.qoe import (
     FluidQoE,
     QoESpec,
@@ -41,4 +50,6 @@ __all__ = [
     "Scheduler", "SchedulerConfig", "FCFSScheduler", "RoundRobinScheduler",
     "AndesScheduler", "AndesDPScheduler", "SCHEDULERS", "make_scheduler",
     "TokenBuffer",
+    "QoEPricer", "SLOContract", "placement_gain", "request_weight",
+    "shared_token_rate", "slo_attained", "weighted_attainment",
 ]

@@ -3,11 +3,14 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import List, Optional
+from typing import TYPE_CHECKING, List, Optional
 
 import numpy as np
 
 from repro.core.qoe import QoESpec, qoe_exact, tds_actual, ttft_actual
+
+if TYPE_CHECKING:  # pricing imports request; annotation only, no cycle
+    from repro.core.pricing import SLOContract
 
 
 class ReqState(enum.Enum):
@@ -27,6 +30,10 @@ class Request:
     output_len: int
     prompt_tokens: Optional[np.ndarray] = None       # real engine only
     tenant: int = 0              # multi-tenant traces (cluster layer)
+    priority: int = 0            # priority class (0 = default; pricing
+                                 # weighs class p as (1+p)x, core.pricing)
+    contract: Optional["SLOContract"] = None   # per-tenant SLO contract;
+                                 # None prices as the uniform PR 1 default
 
     state: ReqState = ReqState.WAITING
     generated: int = 0
@@ -47,6 +54,7 @@ class Request:
             rid=self.rid, arrival=self.arrival, prompt_len=self.prompt_len,
             spec=self.spec, output_len=self.output_len,
             prompt_tokens=self.prompt_tokens, tenant=self.tenant,
+            priority=self.priority, contract=self.contract,
         )
 
     # ---- knapsack weight (l_i) -------------------------------------------

@@ -34,6 +34,7 @@ import numpy as np
 
 from repro.core import objectives as obj_lib
 from repro.core.latency_model import LatencyModel
+from repro.core.pricing import QoEPricer
 from repro.core.qoe import FluidQoE
 from repro.core.request import Request, ReqState
 
@@ -62,6 +63,12 @@ class Scheduler:
         self.M = kv_capacity
         self.lat = lat
         self.cfg = cfg or SchedulerConfig()
+        # the single QoE-pricing surface (core.pricing): the knapsack below,
+        # the fleet router, admission control, and the autoscaler all price
+        # marginal QoE through this object. Bound to the scheduler so later
+        # re-pointing of self.lat / self.M (backend factories do both) is
+        # seen by every consumer.
+        self.pricer = QoEPricer(self)
         self.iteration = 0
         self.total_preemptions = 0
         self.total_requests = 0
@@ -194,25 +201,15 @@ class AndesScheduler(Scheduler):
         )
 
         # ---- evaluate objective per candidate B ---------------------------
-        idx = np.array([r.fluid_idx for r in live])
-        dt = self.cfg.delta_t
-        # l̂ = emitted + E[remaining] (true response length is unknown online)
-        exp_len = fluid.emitted + np.maximum(
-            self.mean_output_len - fluid.emitted, self.cfg.min_remaining_est
-        )
-        q_wait = fluid.predict_qoe(now, dt, 0.0, exp_len=exp_len)[idx]
-        q_now = fluid.qoe_now(now, exp_len=exp_len)[idx]
-        delays_slot = np.zeros(fluid.arrival.size)
-        delays_slot[idx] = [self._serve_delay(r) for r in live]
+        # all Eq. 2 math lives in the pricer (core.pricing) — the same
+        # implementation the router/admission/autoscaler consume
+        bp = self.pricer.batch_pricing(now, live, fluid)
         gain_fn = obj_lib.OBJECTIVES[self.cfg.objective]
         is_running = np.array([r.state == ReqState.RUNNING for r in live])
 
         best = (-np.inf, None)
-        mean_ctx = float(np.mean([r.context_len for r in live]))
         for b in candidates:
-            rate = self.lat.token_rate(int(b), int(b * mean_ctx))
-            q_serve = fluid.predict_qoe(now, dt, rate, delays_slot, exp_len)[idx]
-            gains = gain_fn(q_serve, q_wait, q_now)
+            gains = self.pricer.serve_gains(now, fluid, bp, int(b), gain_fn)
             sel, value = self._solve(
                 gains + self.cfg.stickiness * is_running, weights, int(b)
             )
@@ -266,12 +263,7 @@ class AndesScheduler(Scheduler):
         return b_min, b_max
 
     def _serve_delay(self, r: Request) -> float:
-        """Time before tokens start flowing if we serve this request."""
-        if r.state == ReqState.RUNNING:
-            return 0.0
-        if r.state == ReqState.SWAPPED:
-            return self.lat.swap_latency(r.context_len)
-        return self.lat.prefill_latency(r.prompt_len)
+        return self.pricer.serve_delay(r)
 
     def _solve(self, gains, weights, b) -> Tuple[np.ndarray, float]:
         """Algorithm 1: greedy packing by priority = gain / weight."""

@@ -1,6 +1,6 @@
 from repro.serving.engine import ServingEngine
 from repro.serving.kv_manager import KVSlotManager
-from repro.serving.request import Request, ReqState
+from repro.core.request import Request, ReqState
 from repro.serving.simulator import ServingSimulator, SimConfig, SimResult
 from repro.serving.speculative import DraftProposer, check_speculation_compatible
 

@@ -54,7 +54,7 @@ from repro.core.scheduler import Scheduler
 from repro.models import cache as cache_lib
 from repro.models.model import Model
 from repro.serving.kv_manager import KVSlotManager
-from repro.serving.request import Request, ReqState
+from repro.core.request import Request, ReqState
 from repro.serving.simulator import SimResult
 from repro.serving.speculative import DraftProposer, check_speculation_compatible
 
@@ -121,6 +121,10 @@ class ServingEngine:
         self.preemption_mode = preemption_mode
         self.clock = clock
         self.eos_id = eos_id
+        # optional lifecycle-event sink (repro.api): called as
+        # sink(kind, request, t, k), kind in {"emit","preempt","finish"};
+        # survives reset() so run() keeps reporting to an installed client
+        self.event_sink = None
         self.max_seq = max_seq
         self._num_slots = num_slots
         self._capacity_tokens = capacity_tokens
@@ -249,6 +253,8 @@ class ServingEngine:
         self.fluid.emit(r.fluid_idx, self.now, 1)
         self.kv.grow(r)
         self.total_tokens += 1
+        if self.event_sink is not None:
+            self.event_sink("emit", r, self.now, 1)
         done = (r.generated >= r.output_len
                 or (self.eos_id >= 0 and tok == self.eos_id))
         if done:
@@ -275,6 +281,8 @@ class ServingEngine:
             self.fluid.emit(r.fluid_idx, self.now, len(emitted))
             self.kv.grow(r, len(emitted))
             self.total_tokens += len(emitted)
+            if self.event_sink is not None:
+                self.event_sink("emit", r, self.now, len(emitted))
         done = (r.generated >= r.output_len
                 or (self.eos_id >= 0 and emitted and
                     emitted[-1] == self.eos_id))
@@ -289,6 +297,8 @@ class ServingEngine:
         slot = r.engine_slot
         self.kv.release(r)
         self.slot_req.pop(slot, None)
+        if self.event_sink is not None:
+            self.event_sink("finish", r, self.now, 0)
 
     # ------------------------------------------------------------ preempt
     def _preempt(self, r: Request) -> None:
@@ -307,6 +317,8 @@ class ServingEngine:
             r.prefilled = False
         self.slot_req.pop(slot, None)
         self.sched.record_preemptions(1)
+        if self.event_sink is not None:
+            self.event_sink("preempt", r, self.now, 0)
 
     def _swap_in(self, r: Request) -> None:
         host_slice = self.kv.swap_in(r)

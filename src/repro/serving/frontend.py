@@ -1,50 +1,21 @@
-"""Modality frontend stubs — the ONE allowed carve-out (DESIGN.md §5).
+"""Deprecated alias: the modality stubs moved to repro.serving.modality
+(the `frontend` name now refers to the client-facing serving API in
+repro.api). This shim re-exports everything and warns once on import."""
+import warnings
 
-The assigned [audio] and [vlm] architectures specify the *transformer
-backbone*; the conv/mel codec (SeamlessM4T) and the ViT tower (Pixtral) are
-stubs that produce correctly-shaped, deterministic embeddings:
+from repro.serving.modality import (  # noqa: F401
+    audio_frame_specs,
+    synthetic_frames,
+    synthetic_patches,
+    vision_patch_specs,
+)
 
-  * dry-run:   `audio_frame_specs` / `vision_patch_specs` — ShapeDtypeStructs
-  * runtime:   `synthetic_frames` / `synthetic_patches` — smooth, bounded
-               embeddings (sinusoidal features of a hashed input id) so
-               engine/tests exercise the real cross-attention / prefix paths
-               with stable numerics.
-"""
-from __future__ import annotations
+warnings.warn(
+    "repro.serving.frontend moved to repro.serving.modality; the client-"
+    "facing serving API lives in repro.api",
+    DeprecationWarning,
+    stacklevel=2,
+)
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs.base import ModelConfig
-
-
-def audio_frame_specs(cfg: ModelConfig, batch: int, frames: int,
-                      dtype=jnp.bfloat16) -> jax.ShapeDtypeStruct:
-    """Precomputed mel+conv frame embeddings the encoder consumes."""
-    return jax.ShapeDtypeStruct((batch, frames, cfg.d_model), dtype)
-
-
-def vision_patch_specs(cfg: ModelConfig, batch: int, patches: int,
-                       dtype=jnp.bfloat16) -> jax.ShapeDtypeStruct:
-    """Precomputed ViT patch embeddings the decoder prefixes."""
-    return jax.ShapeDtypeStruct((batch, patches, cfg.d_model), dtype)
-
-
-def _sinusoid_embed(ids: jax.Array, length: int, d_model: int) -> jax.Array:
-    """Deterministic smooth embeddings keyed by per-sample ids (B,)."""
-    pos = jnp.arange(length, dtype=jnp.float32)[None, :, None]
-    freq = jnp.exp(
-        -jnp.arange(d_model, dtype=jnp.float32) / d_model * 4.0
-    )[None, None, :]
-    phase = (ids.astype(jnp.float32) * 0.7)[:, None, None]
-    return 0.1 * jnp.sin(pos * freq + phase)
-
-
-def synthetic_frames(cfg: ModelConfig, ids: jax.Array, frames: int) -> jax.Array:
-    """(B,) sample ids -> (B, frames, d_model) audio-frame embeddings."""
-    return _sinusoid_embed(ids, frames, cfg.d_model)
-
-
-def synthetic_patches(cfg: ModelConfig, ids: jax.Array, patches: int) -> jax.Array:
-    """(B,) sample ids -> (B, patches, d_model) vision-patch embeddings."""
-    return _sinusoid_embed(ids, patches, cfg.d_model)
+__all__ = ["audio_frame_specs", "vision_patch_specs",
+           "synthetic_frames", "synthetic_patches"]

@@ -25,7 +25,7 @@ from typing import Dict, List, Optional
 import jax
 import numpy as np
 
-from repro.serving.request import Request
+from repro.core.request import Request
 
 
 class KVSlotManager:

@@ -1,0 +1,54 @@
+"""Modality stubs — the ONE allowed carve-out (DESIGN.md §5).
+
+(Formerly serving/frontend.py; renamed so the `frontend` name is free for
+the client-facing serving API in repro.api and the module name matches its
+contents — these are modality input stubs, not a serving frontend.)
+
+The assigned [audio] and [vlm] architectures specify the *transformer
+backbone*; the conv/mel codec (SeamlessM4T) and the ViT tower (Pixtral) are
+stubs that produce correctly-shaped, deterministic embeddings:
+
+  * dry-run:   `audio_frame_specs` / `vision_patch_specs` — ShapeDtypeStructs
+  * runtime:   `synthetic_frames` / `synthetic_patches` — smooth, bounded
+               embeddings (sinusoidal features of a hashed input id) so
+               engine/tests exercise the real cross-attention / prefix paths
+               with stable numerics.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def audio_frame_specs(cfg: ModelConfig, batch: int, frames: int,
+                      dtype=jnp.bfloat16) -> jax.ShapeDtypeStruct:
+    """Precomputed mel+conv frame embeddings the encoder consumes."""
+    return jax.ShapeDtypeStruct((batch, frames, cfg.d_model), dtype)
+
+
+def vision_patch_specs(cfg: ModelConfig, batch: int, patches: int,
+                       dtype=jnp.bfloat16) -> jax.ShapeDtypeStruct:
+    """Precomputed ViT patch embeddings the decoder prefixes."""
+    return jax.ShapeDtypeStruct((batch, patches, cfg.d_model), dtype)
+
+
+def _sinusoid_embed(ids: jax.Array, length: int, d_model: int) -> jax.Array:
+    """Deterministic smooth embeddings keyed by per-sample ids (B,)."""
+    pos = jnp.arange(length, dtype=jnp.float32)[None, :, None]
+    freq = jnp.exp(
+        -jnp.arange(d_model, dtype=jnp.float32) / d_model * 4.0
+    )[None, None, :]
+    phase = (ids.astype(jnp.float32) * 0.7)[:, None, None]
+    return 0.1 * jnp.sin(pos * freq + phase)
+
+
+def synthetic_frames(cfg: ModelConfig, ids: jax.Array, frames: int) -> jax.Array:
+    """(B,) sample ids -> (B, frames, d_model) audio-frame embeddings."""
+    return _sinusoid_embed(ids, frames, cfg.d_model)
+
+
+def synthetic_patches(cfg: ModelConfig, ids: jax.Array, patches: int) -> jax.Array:
+    """(B,) sample ids -> (B, patches, d_model) vision-patch embeddings."""
+    return _sinusoid_embed(ids, patches, cfg.d_model)

@@ -1,5 +1,6 @@
-"""Re-export: Request lifecycle lives in repro.core.request (the scheduler
-is part of the paper's core and owns the request model)."""
-from repro.core.request import Request, ReqState
+"""Compatibility shim: the request model lives in repro.core.request (the
+scheduler is part of the paper's core and owns it). All in-repo call sites
+import repro.core.request directly; this re-export stays for external users."""
+from repro.core.request import Request, ReqState  # noqa: F401
 
 __all__ = ["Request", "ReqState"]

@@ -31,7 +31,7 @@ import numpy as np
 from repro.core.latency_model import LatencyModel
 from repro.core.qoe import FluidQoE
 from repro.core.scheduler import Scheduler
-from repro.serving.request import Request, ReqState
+from repro.core.request import Request, ReqState
 
 
 @dataclasses.dataclass
@@ -100,6 +100,11 @@ class ServingSimulator:
         self.sched = scheduler
         self.lat = lat
         self.cfg = sim_cfg
+        # optional lifecycle-event sink (repro.api): called as
+        # sink(kind, request, t, k) with kind in {"emit","preempt",
+        # "finish"}; survives reset() so run() keeps reporting to an
+        # installed client
+        self.event_sink = None
         self.reset()
 
     # ------------------------------------------------------------------ state
@@ -166,11 +171,14 @@ class ServingSimulator:
         target_set = set(id(r) for r in target)
 
         # ---- preemptions ------------------------------------------------
+        sink = self.event_sink
         iter_extra = 0.0
         newly_preempted = [r for r in running if id(r) not in target_set]
         for r in newly_preempted:
             r.preemptions += 1
             self.preemptions += 1
+            if sink is not None:
+                sink("preempt", r, now, 0)
             ctx = r.context_len
             if (self.cfg.preemption_mode == "swap"
                     and self.host_kv_used + ctx <= self.cfg.host_kv_capacity_tokens):
@@ -208,6 +216,8 @@ class ServingSimulator:
             fluid.emit(r.fluid_idx, prefill_done, 1)
             r.generated = 1
             self.total_tokens += 1
+            if sink is not None:
+                sink("emit", r, prefill_done, 1)
 
         # ---- decode iteration -------------------------------------------
         decoders = [r for r in running if r.generated < r.output_len]
@@ -222,6 +232,8 @@ class ServingSimulator:
             r.generated += 1
             self.total_tokens += 1
             emit_idx.append(r.fluid_idx)
+            if sink is not None:
+                sink("emit", r, now, 1)
         if emit_idx:
             fluid.emit(np.array(emit_idx), now, 1)
 
@@ -231,6 +243,8 @@ class ServingSimulator:
                 r.state = ReqState.FINISHED
                 r.finish_time = now
                 self.sched.on_request_finish(r)
+                if sink is not None:
+                    sink("finish", r, now, 0)
         self.live = [r for r in self.live if r.is_live]
         self.now = now
         self._admit_arrivals(now)

@@ -18,7 +18,7 @@ from typing import List, Optional, Sequence
 import numpy as np
 
 from repro.core.qoe import QoESpec
-from repro.serving.request import Request
+from repro.core.request import Request
 from repro.workload.arrivals import gamma_arrivals, poisson_arrivals
 from repro.workload.qoe_traces import EXPECTED_TTFT, reading_qoe_trace, voice_qoe_trace
 from repro.workload.sharegpt import sample_lengths

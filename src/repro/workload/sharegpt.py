@@ -13,7 +13,7 @@ from typing import List, Optional, Tuple
 import numpy as np
 
 from repro.core.qoe import QoESpec
-from repro.serving.request import Request
+from repro.core.request import Request
 from repro.workload.arrivals import gamma_arrivals, poisson_arrivals
 from repro.workload.qoe_traces import reading_qoe_trace
 

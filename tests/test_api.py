@@ -1,0 +1,374 @@
+"""Unified serving API (repro.api): differential + contract suite.
+
+The ServingClient must be a pure *surface*: driving any backend through
+`client.submit_request` + `drain()` (or lazy stream iteration) is
+bit-identical — emit timestamps, preemption counts, final QoE — to
+driving that backend directly with its own submit/step loop. Verified
+here for all four backend kinds: discrete-event simulator, real-model
+engine, speculative engine, and a 1-replica cluster.
+
+The contract layer (core.pricing.SLOContract) must *reduce*: attaching
+uniform default contracts to every request reproduces the PR 1 uniform
+admission threshold decisions exactly, and uncontracted traffic prices
+at weight 1.0 through the whole stack (scheduler knapsack gains are
+multiplied by exactly 1.0 — an IEEE identity). Non-uniform weights must
+then bite: under surge, the high-weight tenant is shed less.
+"""
+import copy
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st  # hypothesis or fallback
+
+from repro.configs import get_config
+from repro.core import (
+    A100_4X,
+    LatencyModel,
+    QoESpec,
+    SchedulerConfig,
+    SLOContract,
+    make_scheduler,
+    request_weight,
+    slo_attained,
+    weighted_attainment,
+)
+from repro.core import pricing
+from repro.core.qoe import pace_delivery
+from repro.core.request import Request
+from repro.cluster import (
+    AdmissionConfig,
+    ClusterConfig,
+    ClusterSimulator,
+    marginal_qoe_gain,
+)
+from repro.cluster.router import RouterConfig
+from repro.api import ServingClient, SubmitOptions
+from repro.serving.simulator import ServingSimulator, SimConfig
+from repro.workload import make_workload
+
+CFG = get_config("opt-66b")
+LAT = LatencyModel(CFG, A100_4X)
+M = 65_000
+
+
+def make_sim(scheduler="andes", kv=M):
+    sched = make_scheduler(scheduler, kv, LAT, SchedulerConfig())
+    return ServingSimulator(sched, LAT, SimConfig(kv_capacity_tokens=kv))
+
+
+def assert_streams_match(direct_reqs, handles):
+    """Bit-for-bit: emit timestamps, preemptions, final QoE per rid."""
+    d = {r.rid: r for r in direct_reqs}
+    assert len(d) == len(handles)
+    for h in handles:
+        r = d[h.rid]
+        assert r.emit_times == h.request.emit_times
+        assert r.preemptions == h.request.preemptions
+        assert r.final_qoe() == h.qoe()
+
+
+# ---------------------------------------------------------------------------
+# Differential: client ≡ direct driving, per backend kind
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheduler", ["andes", "fcfs"])
+def test_client_over_simulator_bit_identical(scheduler):
+    wl = make_workload(100, 4.0, seed=11, arrival="gamma", cv=3.0)
+    direct = make_sim(scheduler).run(copy.deepcopy(wl))
+    client = ServingClient(make_sim(scheduler))
+    res = client.serve(copy.deepcopy(wl))     # the one-liner replay path
+    assert_streams_match(direct.requests, client.handles())
+    # the client's result() is the backend's own snapshot
+    assert res.total_tokens == direct.total_tokens
+    assert res.makespan == direct.makespan
+
+
+def test_client_over_one_replica_cluster_bit_identical():
+    """Client → 1-replica cluster ≡ direct cluster ≡ bare simulator."""
+    wl = make_workload(100, 4.0, seed=13, arrival="gamma", cv=3.0)
+    ccfg = ClusterConfig(n_replicas=1, kv_capacity_tokens=M)
+    direct = ClusterSimulator(LAT, ccfg).run(copy.deepcopy(wl))
+    bare = make_sim().run(copy.deepcopy(wl))
+    client = ServingClient(
+        ClusterSimulator(LAT, ClusterConfig(n_replicas=1,
+                                            kv_capacity_tokens=M)))
+    handles = [client.submit_request(r) for r in copy.deepcopy(wl)]
+    client.drain()
+    assert_streams_match(direct.admitted, handles)
+    assert_streams_match(bare.requests, handles)
+
+
+def test_client_lazy_stream_iteration_matches_drain():
+    """Pulling streams one token at a time (stepping on demand, in rid
+    order) yields the same timeline as draining wholesale."""
+    wl = make_workload(60, 4.0, seed=17, arrival="gamma", cv=3.0)
+    direct = make_sim().run(copy.deepcopy(wl))
+    client = ServingClient(make_sim())
+    handles = [client.submit_request(r) for r in copy.deepcopy(wl)]
+    events = {h.rid: list(h) for h in handles}     # lazy, interleaved
+    assert_streams_match(direct.requests, handles)
+    d = {r.rid: r for r in direct.requests}
+    for rid, evs in events.items():
+        assert [e.emit_time for e in evs] == d[rid].emit_times
+        # §5 pacing: the event visible_times are pace_delivery of emits
+        want = pace_delivery(np.array(d[rid].emit_times), d[rid].spec.tds)
+        np.testing.assert_array_equal([e.visible_time for e in evs], want)
+
+
+@pytest.mark.parametrize("spec_k", [0, 2])
+def test_client_over_engine_bit_identical(spec_k):
+    """Real-model engine (and its speculative variant) behind the client
+    ≡ the same engine driven via run()."""
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.core import SpeculativeLatencyModel, TPU_V5E
+    from repro.models import Model
+    from repro.serving import ServingEngine
+
+    cfg = get_smoke_config("llama3-8b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    rng = np.random.default_rng(5)
+    wl = []
+    for i in range(8):
+        plen = int(rng.integers(8, 24))
+        wl.append(Request(
+            rid=i, arrival=i * 0.02, prompt_len=plen,
+            output_len=int(rng.integers(8, 16)),
+            spec=QoESpec(ttft=1.0, tds=4.8),
+            prompt_tokens=rng.integers(0, cfg.vocab_size, plen),
+        ))
+
+    def build():
+        if spec_k:
+            lat = SpeculativeLatencyModel(cfg, TPU_V5E, cfg, k=spec_k)
+            extra = dict(draft_model=model, draft_params=params,
+                         spec_k=spec_k)
+        else:
+            lat = LatencyModel(cfg, TPU_V5E)
+            extra = {}
+        return ServingEngine(
+            model, params, make_scheduler("andes", 160, lat), lat,
+            num_slots=3, max_seq=64, capacity_tokens=160, **extra)
+
+    direct_wl = [r.clone() for r in wl]
+    build().run(direct_wl)
+
+    client = ServingClient(build())
+    handles = [client.submit_request(r.clone()) for r in wl]
+    client.drain()
+    assert_streams_match(direct_wl, handles)
+    # token ids stream through the handle: read() yields every emitted
+    # token exactly once, even when the backend was drained wholesale
+    d = {r.rid: r for r in direct_wl}
+    for h in handles:
+        assert h.tokens() == d[h.rid].output_tokens
+        assert [e.token for e in h.read()] == d[h.rid].output_tokens
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle callbacks
+# ---------------------------------------------------------------------------
+
+def test_lifecycle_callbacks_fire_consistently():
+    # tight KV forces preemptions so on_preempt is exercised
+    wl = make_workload(80, 8.0, seed=3, arrival="gamma", cv=3.0)
+    client = ServingClient(make_sim(kv=12_000))
+    counts = {}
+
+    def track(kind):
+        def cb(h, t, k=1):
+            counts.setdefault(h.rid, {}).setdefault(kind, 0)
+            counts[h.rid][kind] += k if kind == "emit" else 1
+        return cb
+
+    handles = [client.submit_request(
+        r, on_first_token=track("first"), on_emit=track("emit"),
+        on_preempt=track("preempt"), on_finish=track("finish"))
+        for r in wl]
+    client.drain()
+    assert any(h.request.preemptions > 0 for h in handles)
+    for h in handles:
+        c = counts[h.rid]
+        assert c["emit"] == h.request.generated
+        assert c["first"] == 1
+        assert c["finish"] == 1
+        assert c.get("preempt", 0) == h.request.preemptions
+
+
+def test_shed_stream_ends_empty_with_zero_qoe():
+    cfg = ClusterConfig(
+        n_replicas=1, router="qoe", kv_capacity_tokens=4_000,
+        admission=AdmissionConfig(policy="shed"),
+    )
+    wl = make_workload(150, 40.0, seed=2, arrival="gamma", cv=3.0)
+    client = ServingClient(ClusterSimulator(LAT, cfg))
+    handles = [client.submit_request(r) for r in wl]
+    client.drain()
+    shed = [h for h in handles if h.shed]
+    assert shed, "surge should shed something"
+    for h in shed:
+        assert list(h) == []
+        assert h.done and not h.finished
+        assert h.qoe() == 0.0
+
+
+# ---------------------------------------------------------------------------
+# SLO contracts: reduction + pricing
+# ---------------------------------------------------------------------------
+
+def run_admission(wl, contract=None, policy="shed"):
+    cfg = ClusterConfig(
+        n_replicas=2, router="qoe", kv_capacity_tokens=10_000,
+        admission=AdmissionConfig(policy=policy),
+    )
+    wl = [r.clone() for r in wl]
+    for r in wl:
+        r.contract = contract
+    return ClusterSimulator(LAT, cfg).run(wl)
+
+
+@given(st.integers(0, 10_000), st.integers(0, 1))
+@settings(max_examples=6, deadline=None)
+def test_uniform_contracts_reduce_to_uniform_threshold(seed, policy_i):
+    """Property: attaching the *same default* SLOContract to every request
+    changes nothing — admission decisions, emit timelines, and QoE are
+    bit-identical to the uncontracted PR 1 uniform min_gain threshold."""
+    policy = ("shed", "defer")[policy_i]
+    wl = make_workload(60, 25.0, seed=seed, arrival="gamma", cv=3.0)
+    base = run_admission(wl, contract=None, policy=policy)
+    uni = run_admission(wl, contract=SLOContract(), policy=policy)
+    assert [r.rid for r in base.shed] == [r.rid for r in uni.shed]
+    assert base.n_defer_events == uni.n_defer_events
+    b = {r.rid: r for r in base.admitted}
+    for r in uni.admitted:
+        assert r.emit_times == b[r.rid].emit_times
+    assert base.avg_qoe() == uni.avg_qoe()
+
+
+def test_contract_weight_shifts_shedding_to_low_weight_tenant():
+    """Under surge, weight-w pricing sheds the low-weight tail first."""
+    gold = SLOContract(weight=4.0)
+    scrap = SLOContract(weight=0.25)
+    wl = make_workload(160, 30.0, seed=4, arrival="gamma", cv=3.0)
+    for i, r in enumerate(wl):
+        r.tenant = i % 2
+        r.contract = gold if r.tenant == 0 else scrap
+    cfg = ClusterConfig(
+        n_replicas=2, router="qoe", kv_capacity_tokens=6_000,
+        admission=AdmissionConfig(policy="shed"),
+    )
+    res = ClusterSimulator(LAT, cfg).run(wl)
+    shed_by_tenant = {0: 0, 1: 0}
+    for r in res.shed:
+        shed_by_tenant[r.tenant] += 1
+    assert sum(shed_by_tenant.values()) > 0, "surge should shed"
+    assert shed_by_tenant[0] < shed_by_tenant[1]
+
+
+def test_rid_collisions_are_impossible_per_session():
+    """submit() skips rids a trace replay took; submit_request refuses a
+    duplicate outright (per-rid reporting and admission's defer counts
+    would silently conflate two live requests)."""
+    client = ServingClient(make_sim())
+    h0 = client.submit(50)                       # auto rid 0
+    assert h0.rid == 0
+    r5 = Request(rid=5, arrival=0.0, prompt_len=10, output_len=4,
+                 spec=QoESpec(ttft=1.0, tds=4.8))
+    client.submit_request(r5)
+    with pytest.raises(ValueError):
+        client.submit_request(r5.clone())        # rid 5 again
+    assert client.submit(50).rid == 1            # fills the gap...
+    for _ in range(4):
+        client.submit(50)                        # ...then skips past 5
+    assert sorted(h.rid for h in client.handles()) == [0, 1, 2, 3, 4, 5, 6]
+
+
+def test_degradation_priced_at_victim_contract_weights():
+    """placement pricing values each live victim's QoE loss at ITS
+    contract weight — the same fleet objective the knapsack and the
+    attainment signal use (uniform weights reduce to the PR 1 sum)."""
+    from repro.cluster import Replica
+    sched = make_scheduler("andes", 3_000, LAT, SchedulerConfig())
+    sim = ServingSimulator(sched, LAT, SimConfig(kv_capacity_tokens=3_000))
+    rep = Replica(0, sim, LAT)
+    for i in range(10):
+        rep.submit(Request(rid=i, arrival=0.0, prompt_len=300,
+                           output_len=300, spec=QoESpec(ttft=1.0, tds=4.8)))
+    for _ in range(30):
+        rep.step()
+    now = rep.clock
+    newcomer = Request(rid=99, arrival=now, prompt_len=300, output_len=300,
+                       spec=QoESpec(ttft=1.0, tds=4.8))
+    rcfg = RouterConfig()
+    kw = dict(horizon=rcfg.horizon, min_remaining_est=rcfg.min_remaining_est)
+    q1, d1 = pricing.placement_components(rep, newcomer, now, **kw)
+    assert d1 > 0, "saturated replica must predict degradation"
+    for r in rep.live:
+        r.contract = SLOContract(weight=2.0)
+    q2, d2 = pricing.placement_components(rep, newcomer, now, **kw)
+    assert q2 == q1
+    assert d2 == pytest.approx(2.0 * d1)
+
+
+def test_request_weight_and_attainment_semantics():
+    r = Request(rid=0, arrival=0.0, prompt_len=10, output_len=4,
+                spec=QoESpec(ttft=1.0, tds=4.0))
+    assert request_weight(r) == 1.0
+    r.priority = 2
+    assert request_weight(r) == 3.0
+    r.contract = SLOContract(weight=0.5)
+    assert request_weight(r) == 1.5
+    r.priority = 0
+    # attainment: perfect delivery meets a lenient contract, not a strict
+    # TTFT target
+    r.emit_times = [0.5, 0.75, 1.0, 1.25]
+    r.generated = 4
+    assert slo_attained(r, default_floor=0.9)
+    r.contract = SLOContract(ttft_target=0.1)
+    assert not slo_attained(r, default_floor=0.9)
+    r.contract = SLOContract(qoe_floor=0.2, ttft_target=1.0, tds_target=1.0)
+    assert slo_attained(r, default_floor=0.99)
+    # weighted attainment: the failing request drags proportionally to w
+    r2 = Request(rid=1, arrival=0.0, prompt_len=10, output_len=4,
+                 spec=QoESpec(ttft=1.0, tds=4.0))
+    r2.contract = SLOContract(weight=3.0, ttft_target=0.0)  # unattainable
+    r2.emit_times = [0.5]
+    r2.generated = 1
+    r.contract = SLOContract(weight=1.0)
+    assert weighted_attainment([r, r2], 0.9) == pytest.approx(0.25)
+
+
+# ---------------------------------------------------------------------------
+# One pricing surface (no duplicated marginal-gain math)
+# ---------------------------------------------------------------------------
+
+def test_router_gain_is_the_pricer_gain():
+    """marginal_qoe_gain is a delegation to core.pricing.placement_gain
+    with the request's contract/priority weight — not a second copy."""
+    from repro.core.scheduler import Scheduler
+    sched = make_scheduler("andes", M, LAT, SchedulerConfig())
+    sim = ServingSimulator(sched, LAT, SimConfig(kv_capacity_tokens=M))
+    from repro.cluster import Replica
+    rep = Replica(0, sim, LAT)
+    rcfg = RouterConfig()
+    req = Request(rid=0, arrival=0.0, prompt_len=100, output_len=100,
+                  spec=QoESpec(ttft=1.0, tds=4.8))
+    got = marginal_qoe_gain(rep, req, 0.0, rcfg)
+    want = pricing.placement_gain(
+        rep, req, 0.0, horizon=rcfg.horizon,
+        min_remaining_est=rcfg.min_remaining_est, weight=1.0)
+    assert got == want
+    # weight scales exactly the newcomer term
+    req.contract = SLOContract(weight=2.0)
+    q_new, deg = pricing.placement_components(
+        rep, req, 0.0, horizon=rcfg.horizon,
+        min_remaining_est=rcfg.min_remaining_est)
+    assert marginal_qoe_gain(rep, req, 0.0, rcfg) == 2.0 * q_new - deg
+    # every scheduler owns a pricer bound to itself (live lat/M views)
+    assert isinstance(sched, Scheduler) and sched.pricer.sched is sched
+    assert sched.pricer.lat is sched.lat
+    assert sched.pricer.kv_capacity == sched.M

@@ -1,11 +1,11 @@
-"""Modality frontend stubs feed real enc-dec / VLM serving paths."""
+"""Modality stubs (serving.modality) feed real enc-dec / VLM serving paths."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.models import Model
-from repro.serving import frontend
+from repro.serving import modality as frontend
 
 
 def test_audio_frontend_through_encdec():
@@ -53,3 +53,19 @@ def test_specs_match_model_input_specs():
     want = frontend.audio_frame_specs(cfg, 32, 32768)
     assert specs["frames"].shape == want.shape
     assert specs["frames"].dtype == want.dtype
+
+
+def test_frontend_shim_still_reexports_with_deprecation():
+    """serving.frontend moved to serving.modality; the shim must keep
+    external imports working and warn once."""
+    import importlib
+    import sys
+    import warnings
+
+    sys.modules.pop("repro.serving.frontend", None)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        legacy = importlib.import_module("repro.serving.frontend")
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    assert legacy.synthetic_frames is frontend.synthetic_frames
+    assert legacy.audio_frame_specs is frontend.audio_frame_specs
