@@ -2,8 +2,8 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast test-slow bench bench-api bench-cluster \
-        bench-cluster-engine bench-spec example-quickstart example-cluster \
-        example-cluster-engine
+        bench-cluster-engine bench-hotpath bench-spec example-quickstart \
+        example-cluster example-cluster-engine
 
 # ---- test tiers -----------------------------------------------------------
 # tier-1  (make test-fast): everything NOT marked `slow` — the ROADMAP.md
@@ -43,6 +43,12 @@ bench-cluster-engine:
 # vs the baseline engine on one trace
 bench-spec:
 	$(PYTHON) -m benchmarks.cluster_qoe --speculative
+
+# engine hot path (PR 5): legacy-vs-optimized tokens/s, prefill compile
+# count, host syncs — lossless-gated; writes BENCH_hotpath.json (exits
+# nonzero if any gate fails, which is what the CI job relies on)
+bench-hotpath:
+	$(PYTHON) -m benchmarks.engine_hotpath
 
 example-quickstart:
 	$(PYTHON) examples/quickstart.py

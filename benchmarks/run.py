@@ -16,6 +16,7 @@ import time
 from benchmarks import (
     appendixA_objectives,
     cluster_qoe,
+    engine_hotpath,
     fig03_motivation,
     fig10_qoe_sharegpt,
     fig11_qoe_multiround,
@@ -41,6 +42,7 @@ MODULES = {
     "fig21": fig21_norm_latency,
     "appendixA": appendixA_objectives,
     "cluster": cluster_qoe,
+    "hotpath": engine_hotpath,
     "kernels": kernels_micro,
     "roofline": roofline,
 }

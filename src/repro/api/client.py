@@ -154,9 +154,22 @@ class ServingClient:
         return h
 
     # -------------------------------------------------------------- driving
-    def step(self) -> bool:
-        """Advance the backend by one event/iteration (False = drained)."""
-        return self.backend.step()
+    def step(self, until: Optional[float] = None) -> bool:
+        """Advance the backend by one event/iteration (False = drained).
+
+        `until`: forwarded to backends that support it (the hot-path
+        engine bounds its multi-step decode block so the clock crosses
+        `until` at a single indivisible iteration — see
+        ServingEngine.step). Requests already submitted need no bound:
+        the engine stops fused blocks at its own pending queue. Pass it
+        only when you plan to submit a request with an explicit future
+        `arrival` AFTER stepping past it — without the bound, a fused
+        block commits several iterations per call, so the clock (and the
+        admission boundary of that later submit) can land further along
+        than a baseline engine driven by the same call sequence."""
+        if until is None:
+            return self.backend.step()
+        return self.backend.step(until=until)
 
     def drain(self) -> List[StreamHandle]:
         """Serve everything submitted so far to completion."""

@@ -50,13 +50,17 @@ def engine_backend(
     capacity_tokens: Optional[int] = None,
     clock: str = "virtual",
     eos_id: int = -1,
+    hotpath=None,
 ) -> BackendFactory:
     """Factory of real-model replicas: each one a `ServingEngine` over the
     shared `(model, params)`. `capacity_tokens` defaults to the cluster
     config's per-replica KV budget (clamped to what the slot cache can
     physically hold); the replica's scheduler is re-pointed at the same
     capacity so its knapsack, the router's pricing, and admission control
-    never assume KV the engine does not physically have."""
+    never assume KV the engine does not physically have. `hotpath` is the
+    engine's HotpathConfig (None = the lossless optimizations ON, the
+    engine default; pass HotpathConfig.baseline() for the pre-PR-5
+    loop)."""
     def factory(replica_id: int, scheduler: Scheduler,
                 lat: LatencyModel, cluster_cfg) -> SteppableBackend:
         from repro.serving.engine import ServingEngine
@@ -68,7 +72,7 @@ def engine_backend(
             model, params, scheduler, lat,
             num_slots=num_slots, max_seq=max_seq, capacity_tokens=cap,
             preemption_mode=cluster_cfg.preemption_mode,
-            clock=clock, eos_id=eos_id,
+            clock=clock, eos_id=eos_id, hotpath=hotpath,
         )
     return factory
 
@@ -85,6 +89,7 @@ def speculative_backend(
     capacity_tokens: Optional[int] = None,
     clock: str = "virtual",
     eos_id: int = -1,
+    hotpath=None,
 ) -> BackendFactory:
     """Factory of speculative real-model replicas: each one a
     `ServingEngine` whose decode steps draft-propose `spec_k` tokens with
@@ -114,7 +119,7 @@ def speculative_backend(
             model, params, scheduler, spec_lat,
             num_slots=num_slots, max_seq=max_seq, capacity_tokens=cap,
             preemption_mode=cluster_cfg.preemption_mode,
-            clock=clock, eos_id=eos_id,
+            clock=clock, eos_id=eos_id, hotpath=hotpath,
             draft_model=draft_model, draft_params=draft_params,
             spec_k=spec_k,
         )

@@ -286,20 +286,28 @@ class ClusterSimulator:
             if self.event_sink is not None:
                 self.event_sink("shed", req, route_at, 0)
 
-    def step(self) -> bool:
+    def step(self, until: Optional[float] = None) -> bool:
         """One fleet event: route the next queued arrival, or — once the
         queue is empty — advance every busy replica by one iteration
         (replicas are independent after routing, so per-replica outcomes
         are identical to draining them one at a time). Returns False when
         fully drained; the first False triggers the end-of-trace
         autoscaler cleanup (cancel in-flight provisions, reap drained
-        replicas) exactly as the monolithic run() loop did."""
+        replicas) exactly as the monolithic run() loop did.
+
+        `until`: arrivals already routed bound each replica's multi-step
+        fast path through Replica.advance_to; pass `until` (forwarded to
+        every replica stepped here) only for the future-submit pattern —
+        a multi-wave session that will submit a request with an explicit
+        later `arrival` after stepping past it — so drain-phase fused
+        blocks stop at the same iteration boundary a baseline fleet
+        driven by the identical call sequence would."""
         if self._queue:
             self._route_next()
             return True
         progressed = False
         for rep in self.replicas + self.retired:
-            if rep.has_work and rep.step():
+            if rep.has_work and rep.step(until=until):
                 progressed = True
         if progressed:
             self.now = max([self.now]

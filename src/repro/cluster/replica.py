@@ -40,7 +40,7 @@ class SteppableBackend(Protocol):
     has_work: bool
 
     def submit(self, req: Request) -> None: ...
-    def step(self) -> bool: ...
+    def step(self, until: Optional[float] = None) -> bool: ...
     def result(self) -> SimResult: ...
 
 
@@ -70,16 +70,20 @@ class Replica:
         self.n_routed += 1
         self.backend.submit(req)
 
-    def step(self) -> bool:
-        return self.backend.step()
+    def step(self, until: Optional[float] = None) -> bool:
+        return self.backend.step(until=until)
 
     def advance_to(self, t: float) -> None:
         """Run iterations until the replica's clock reaches t (or idle).
         Iterations are indivisible (continuous batching), so the clock may
         overshoot t — identical to how a single engine admits arrivals at
-        the next iteration boundary."""
+        the next iteration boundary. `t` is passed down as the backend's
+        `until` bound so an engine's multi-step decode never fuses past
+        the upcoming routed arrival: the crossing remains one indivisible
+        iteration, keeping routed timelines bit-identical to
+        submit-everything-upfront runs."""
         while self.backend.has_work and self.backend.now < t:
-            if not self.step():
+            if not self.step(until=t):
                 break
 
     def drain(self) -> None:

@@ -90,6 +90,23 @@ class LatencyModel:
         """Per-request decode speed (tokens/s) at batch size B."""
         return 1.0 / self.iter_latency(batch_size, total_ctx)
 
+    def iter_latency_schedule(self, batch_size: int, total_ctx: int,
+                              steps: int) -> "list[float]":
+        """Per-iteration latencies of `steps` consecutive decode iterations
+        at a fixed batch: every iteration emits one token per request, so
+        the context term grows by batch_size per step. Deterministic — this
+        is what lets the engine's multi-step decode fast path reconstruct
+        per-step virtual-clock emit timestamps EXACTLY (the same
+        `iter_latency` calls, in the same order, the one-step loop makes)
+        and what the planner uses to bound a block by the next pending
+        arrival before dispatching it."""
+        out = []
+        ctx = total_ctx
+        for _ in range(steps):
+            out.append(self.iter_latency(batch_size, ctx))
+            ctx += batch_size
+        return out
+
     def per_token_latency(self, batch_size: int,
                           total_ctx: int | None = None) -> float:
         """Seconds per *emitted* token. For the one-token-per-iteration

@@ -340,11 +340,32 @@ class QoEPricer:
         over (Q_serve(B), Q_wait, Q_now), contract/priority-weighted
         (all-default weights are exactly 1.0 — bit-identical to the
         unweighted gains)."""
+        return self.serve_gains_grid(now, fluid, bp, [int(b)], gain_fn)[0]
+
+    def serve_gains_grid(self, now: float, fluid, bp: BatchPricing,
+                         bs, gain_fn) -> np.ndarray:
+        """Knapsack item values for a whole grid of candidate batch sizes
+        in ONE vectorized pricing pass — the §4.2 #2/#3 hot path.
+
+        The per-request terms (fluid state, serve delays, l̂, Q_wait,
+        Q_now, contract weights) do not depend on B; only the hypothetical
+        serving rate does. Pricing each of the ~12 candidates separately
+        re-derived all of them per candidate; here the B axis is one numpy
+        broadcast through `FluidQoE.predict_qoe_grid` (elementwise ⇒ each
+        row bit-identical to the old per-B call, so the chosen batch — and
+        every downstream emit timestamp — is unchanged). Returns
+        (len(bs), n_live); gain_fn is applied per row because some
+        objectives (max_min_qoe) reduce over the live axis internally."""
         cfg = self.sched.cfg
-        rate = self.lat.token_rate(int(b), int(b * bp.mean_ctx))
-        q_serve = fluid.predict_qoe(now, cfg.delta_t, rate, bp.delays_slot,
-                                    bp.exp_len)[bp.idx]
-        return gain_fn(q_serve, bp.q_wait, bp.q_now) * bp.weights
+        rates = np.array([self.lat.token_rate(int(b), int(b * bp.mean_ctx))
+                          for b in bs], np.float64)
+        q_serve = fluid.predict_qoe_grid(
+            now, cfg.delta_t, rates, bp.delays_slot, bp.exp_len
+        )[:, bp.idx]
+        return np.stack([
+            gain_fn(q_serve[i], bp.q_wait, bp.q_now) * bp.weights
+            for i in range(len(bs))
+        ])
 
 
 __all__ = [

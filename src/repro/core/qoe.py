@@ -264,7 +264,33 @@ class FluidQoE:
         Pure function: does NOT mutate state (operates on copies).
         """
         n = self.arrival.size
-        rate = np.broadcast_to(np.asarray(rate, np.float64), (n,)).copy()
+        rate = np.broadcast_to(np.asarray(rate, np.float64), (n,))
+        return self.predict_qoe_grid(t, dt, rate[None, :], delay, exp_len)[0]
+
+    def predict_qoe_grid(
+        self,
+        t: float,
+        dt: float,
+        rates: np.ndarray,
+        delay: np.ndarray = None,
+        exp_len: np.ndarray = None,
+    ) -> np.ndarray:
+        """`predict_qoe` evaluated for a whole grid of serving rates in one
+        vectorized pass: rates (nB,) — one hypothetical rate per candidate
+        batch size — or (nB, n) per (candidate, request). Returns (nB, n).
+
+        This is the scheduler-knapsack hot path: the per-request fluid
+        state, delays, and l̂ do not depend on the candidate B, so pricing
+        all 12 candidates is one broadcast over the rate axis instead of 12
+        re-derivations (QoEPricer.serve_gains_grid). Every operation is
+        elementwise, so each row is bit-identical to a scalar-rate
+        `predict_qoe` call — the greedy knapsack sees the exact same gains.
+        """
+        n = self.arrival.size
+        rates = np.asarray(rates, np.float64)
+        if rates.ndim == 1:
+            rates = rates[:, None]
+        rate = np.broadcast_to(rates, (rates.shape[0], n))
         delay = (np.zeros(n) if delay is None
                  else np.broadcast_to(np.asarray(delay, np.float64), (n,)).copy())
         delay = np.minimum(delay, dt)
@@ -298,7 +324,7 @@ class FluidQoE:
             n_vis = n_vis + grow * tb
             return n_vis, buf, s_act
 
-        # segment 1: [0, delay) — no inflow
+        # segment 1: [0, delay) — no inflow (rate-independent, stays (n,))
         n_vis, buf, s_act = seg(delay, np.zeros(n), n_vis, buf, s_act)
         # segment 2: [delay, delay+t_gen) — inflow at `rate` until l̂ reached
         seg2 = dt - delay
@@ -311,11 +337,14 @@ class FluidQoE:
             t_gen = np.where(rate > 0, seg2, 0.0)
         n_vis, buf, s_act = seg(t_gen, rate, n_vis, buf, s_act)
         # segment 3: rest — generation finished / not served, buffer drains
-        n_vis, buf, s_act = seg(seg2 - t_gen, np.zeros(n), n_vis, buf, s_act)
+        n_vis, buf, s_act = seg(seg2 - t_gen, np.zeros(n)[None, :], n_vis,
+                                buf, s_act)
 
         t_rel = (t + dt) - self.arrival
         s_exp = self._expected_area_vec(t_rel, cap=exp_len)
-        out = np.ones(n)
-        nz = s_exp > 0
-        out[nz] = np.clip(s_act[nz] / s_exp[nz], 0.0, 1.0)
+        s_act = np.broadcast_to(s_act, rate.shape)
+        out = np.ones(rate.shape)
+        nz = np.broadcast_to(s_exp > 0, rate.shape)
+        out[nz] = np.clip(s_act[nz] / np.broadcast_to(s_exp, rate.shape)[nz],
+                          0.0, 1.0)
         return out

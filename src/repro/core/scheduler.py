@@ -100,6 +100,26 @@ class Scheduler:
                  ) -> List[Request]:
         raise NotImplementedError
 
+    def idle_steps(self, live: List[Request], max_steps: int) -> int:
+        """How many consecutive future iterations this scheduler GUARANTEES
+        it would be a pure pass-through — i.e. schedule() would return the
+        full live set with no decision (no knapsack, no preemption, no
+        rotation) — assuming every live request is RUNNING, none finishes,
+        and no arrival lands in the window (the engine checks those).
+
+        This is the legality certificate for the engine's multi-step decode
+        fast path (§4.2 #1 turned into a skip): the engine may fuse up to
+        idle_steps()+1 decode iterations into one device dispatch and
+        replay the skipped schedule() calls as `iteration += k` bookkeeping.
+        The base scheduler (and any stateful policy like round-robin)
+        answers 0: never skip me."""
+        return 0
+
+    def skip_iterations(self, k: int) -> None:
+        """Replay `k` skipped pass-through schedule() calls (multi-step
+        decode committed k+1 iterations off one schedule decision)."""
+        self.iteration += k
+
 
 class FCFSScheduler(Scheduler):
     """vLLM-style: running requests keep running; waiting requests admitted
@@ -200,19 +220,23 @@ class AndesScheduler(Scheduler):
             .round().astype(int)
         )
 
-        # ---- evaluate objective per candidate B ---------------------------
+        # ---- evaluate objective over the candidate-B grid -----------------
         # all Eq. 2 math lives in the pricer (core.pricing) — the same
-        # implementation the router/admission/autoscaler consume
+        # implementation the router/admission/autoscaler consume. The
+        # per-request terms are invariant across candidates, so the whole
+        # grid is priced in ONE vectorized pass (serve_gains_grid; rows are
+        # bit-identical to per-B serve_gains calls) and only the knapsack
+        # solve itself remains per candidate.
         bp = self.pricer.batch_pricing(now, live, fluid)
         gain_fn = obj_lib.OBJECTIVES[self.cfg.objective]
         is_running = np.array([r.state == ReqState.RUNNING for r in live])
 
+        gains_grid = self.pricer.serve_gains_grid(
+            now, fluid, bp, candidates, gain_fn
+        ) + self.cfg.stickiness * is_running
         best = (-np.inf, None)
-        for b in candidates:
-            gains = self.pricer.serve_gains(now, fluid, bp, int(b), gain_fn)
-            sel, value = self._solve(
-                gains + self.cfg.stickiness * is_running, weights, int(b)
-            )
+        for gains, b in zip(gains_grid, candidates):
+            sel, value = self._solve(gains, weights, int(b))
             if value > best[0]:
                 best = (value, sel)
 
@@ -224,6 +248,40 @@ class AndesScheduler(Scheduler):
         return chosen
 
     # ------------------------------------------------------------------ parts
+    def idle_steps(self, live, max_steps):
+        """Andes is a pass-through iteration exactly when the §4.2 #1
+        trigger is off: schedule() then returns `_admit_all`, which admits
+        every live request (untriggered ⇒ total demand ≤ watermark·M < M ⇒
+        all fit). Project the trigger forward: the latency term is
+        invariant within the window (len(live) and the stiffest TDS don't
+        change while nobody finishes/arrives), and the memory term grows
+        deterministically — every running request's KV weight grows by one
+        token per iteration (or not at all under state_equiv_tokens). The
+        s-th skipped call sees demand + s·grow; return the largest s kept
+        under the watermark."""
+        if not live:
+            return 0
+        if any(r.state != ReqState.RUNNING for r in live):
+            return 0
+        stiffest = max((r.spec.tds for r in live), default=0.0)
+        if stiffest > 0 and \
+                self.lat.per_token_latency(len(live)) > 1.0 / stiffest:
+            return 0                         # latency trigger is on
+        st = self.cfg.state_equiv_tokens
+        demand = int(self._weights(live).sum())
+        cap = self.cfg.memory_watermark * self.M
+        if demand > cap:
+            return 0                         # memory trigger is on
+        grow = 0 if st else len(live)
+        if grow == 0:
+            return int(max_steps)
+        # largest s with demand + s*grow <= cap (float comparison matches
+        # _triggered's `total_demand > watermark * M` exactly)
+        s = 0
+        while s < max_steps and demand + (s + 1) * grow <= cap:
+            s += 1
+        return s
+
     def _triggered(self, live, running, weights) -> bool:
         used = sum(r.kv_tokens(self.cfg.state_equiv_tokens) for r in running)
         total_demand = int(weights.sum())

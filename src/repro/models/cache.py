@@ -89,6 +89,22 @@ def with_lengths(cache, lengths):
     return dict(cache, length=jnp.asarray(lengths, jnp.int32))
 
 
+def supports_length_rollback(cfg: ModelConfig) -> bool:
+    """True when `length` alone defines cache validity, so decoding PAST a
+    point and then re-pinning `length` is a complete rollback (module
+    docstring: attention never reads beyond `length`, and the next write
+    lands on the first stale position).
+
+    This predicate gates every speculative execution strategy in the
+    serving layer: the spec-decoding verify window (serving/speculative.py)
+    and the engine's multi-step decode overshoot under EOS (the scan may
+    compute iterations past an end-of-sequence token; committing stops at
+    the EOS and `with_lengths` discards the rest). SSM/recurrent state has
+    no positional gate — state at the rollback point would need per-position
+    checkpointing — so those archs must never overshoot."""
+    return cfg.kind not in ("ssm", "hybrid")
+
+
 def _num_attn_applications(cfg: ModelConfig) -> int:
     if cfg.kind == "ssm":
         return 0

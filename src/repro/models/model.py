@@ -112,6 +112,14 @@ class Model:
         return tot / jnp.maximum(cnt, 1) + aux
 
     # ----------------------------------------------------------------- serve
+    def enc_seq(self, max_seq: int) -> int:
+        """Encoder-memory depth a serving cache reserves next to a
+        `max_seq`-token decoder context (0 for everything but
+        encoder-decoder/audio). THE one copy of the ratio — the engine's
+        cache construction, both its prefill paths, and input_specs all
+        must agree or encoder frames pad/mask to mismatched shapes."""
+        return max_seq // 4 if self.cfg.kind in ("encdec", "audio") else 0
+
     def init_cache(self, batch: int, max_seq: int, *, enc_seq: int = 0,
                    dtype=jnp.float32, abstract: bool = False):
         return cache_lib.init_cache(
@@ -185,6 +193,40 @@ class Model:
             window=self.window, kv_repeat=self.kv_repeat,
         )
 
+    def decode_tokens(self, params, tokens, cache):
+        """Fused greedy decode: tokens (B,) int32 -> (next_ids (B,), cache').
+
+        Same forward as `decode_step` with the vocab-sized argmax taken
+        on-device, so a jitted serving loop ships (B,) int32 to host instead
+        of (B, V) float32 — the per-iteration host transfer shrinks by a
+        factor of vocab_size. Greedy ties break identically to a host-side
+        `jnp.argmax` over the `decode_step` logits (first max wins), which
+        is the losslessness foundation tests/test_hotpath.py pins."""
+        logits, cache = self.decode_step(params, tokens, cache)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    def decode_multi(self, params, tokens, cache, j: int):
+        """j fused greedy decode iterations in one `lax.scan`:
+        tokens (B,) int32 -> (ids (j, B) int32, cache').
+
+        Step 0 consumes `tokens` (the last committed token per slot); every
+        later step consumes its own argmax — exactly the serving engine's
+        host-side feedback loop, minus j-1 host↔device round-trips. Static
+        j (jit recompiles per value; the engine quantizes j to a small
+        power-of-two grid to bound compile count). The scan form is
+        bit-identical to j sequential `decode_step` calls on this stack —
+        the same identity `verify_step` already relies on."""
+        def body(carry, _):
+            tok, c = carry
+            logits, c = self.decode_step(params, tok, c)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return (nxt, c), nxt
+
+        (_, cache), toks = jax.lax.scan(
+            body, (tokens, cache), None, length=j
+        )
+        return toks, cache
+
     def verify_step(self, params, tokens, cache):
         """Speculative-decoding verify: tokens (B, T) int32 ->
         (logits (B, T, V), cache'). One jitted call covering the whole
@@ -245,7 +287,7 @@ class Model:
             return {"tokens": tok(b, s)}
 
         # decode: one token against a seq_len-deep cache
-        enc_seq = s // 4 if cfg.kind in ("encdec", "audio") else 0
+        enc_seq = self.enc_seq(s)
         return {
             "tokens": jax.ShapeDtypeStruct((b,), i32),
             "cache": self.init_cache(

@@ -1,4 +1,4 @@
-from repro.serving.engine import ServingEngine
+from repro.serving.engine import BucketedPrefill, HotpathConfig, ServingEngine
 from repro.serving.kv_manager import KVSlotManager
 from repro.core.request import Request, ReqState
 from repro.serving.simulator import ServingSimulator, SimConfig, SimResult
@@ -6,6 +6,7 @@ from repro.serving.speculative import DraftProposer, check_speculation_compatibl
 
 __all__ = [
     "Request", "ReqState", "KVSlotManager", "ServingEngine",
+    "HotpathConfig", "BucketedPrefill",
     "ServingSimulator", "SimConfig", "SimResult",
     "DraftProposer", "check_speculation_compatible",
 ]

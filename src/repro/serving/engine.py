@@ -17,7 +17,7 @@ model ⇒ near-identical scheduling traces.
 
 Like the simulator, the engine is *steppable*: ``submit()`` enqueues
 arrivals, ``step()`` executes one continuous-batching iteration (schedule
-→ preempt → swap-in/prefill → one real decode), and ``result()``
+→ preempt → swap-in/prefill → decode), and ``result()``
 snapshots a SimResult. ``run()`` is a thin loop over ``step()`` that
 reproduces the pre-refactor batch loop bit-for-bit
 (tests/test_engine_steppable.py holds a transcription of the legacy loop
@@ -36,10 +36,73 @@ trace-for-trace) while decode steps shrink by the acceptance factor. A
 step emits a 1..k+1 token burst at one timestamp; FluidQoE.emit absorbs
 it and the client-side pace_delivery smooths it back to the spec'd TDS,
 which is precisely the paper's QoE machinery rewarding burst delivery.
+
+Hot path (``HotpathConfig``, ON by default — PR 5)
+--------------------------------------------------
+Three optimizations make the loop run as fast as the hardware allows
+without changing a single emitted token or timestamp (the four
+differential suites run with them enabled):
+
+* **Bucketed, batched prefill** (``prefill_buckets``): prompts are
+  right-padded to a small geometric bucket grid (powers of two from
+  ``bucket_min`` up past ``max_seq``) and driven through a jitted
+  ``Model.prefill`` via its ``lengths`` masking, so prefill compile count
+  is bounded by #length-buckets × #row-buckets instead of one compile per
+  distinct prompt length. All requests admitted in the same ``step()``
+  prefill together — grouped BY BUCKET, because a request's bucket must
+  depend only on its own length for the batched call to stay bit-identical
+  to the sequential batch-1 path the legacy oracle drives (row
+  independence of the padded forward; pinned in tests/test_hotpath.py) —
+  and land in their slots with one fused multi-row ``_write_slots``
+  scatter instead of N separate dispatches. Virtual-clock bookkeeping
+  (per-request prefill ticks, first-token emit times, KV accounting)
+  is staged in admission order on the host, so timestamps are exactly
+  the sequential path's. MoE models are excluded: expert capacity is
+  proportional to the forward's TOTAL token count, padding included, so
+  padded or batched prefill would change which tokens the capacity gate
+  drops — MoE engines keep the eager exact-length path.
+
+* **Fused on-device sampling** (``fused_sampling``): the jitted decode /
+  verify entry points return argmax token ids ((slots,) int32) instead of
+  ``(slots, vocab)`` logits, shrinking the per-iteration device→host
+  transfer by a factor of vocab_size. The speculative accept-prefix scan
+  (cumprod of proposal/greedy matches) moves on-device too, so one
+  speculative iteration is ONE fused dispatch + ONE host sync
+  (draft propose → window concat → target verify → argmax → accept counts)
+  instead of two round-trips. Greedy ties break identically to the
+  host-side argmax (first max wins) — the losslessness foundation.
+
+* **Multi-step decode** (``multi_step`` = j_max): when the Andes selective
+  trigger (§4.2 #1) is certifiably off for the whole window
+  (``Scheduler.idle_steps`` projects the memory/latency triggers forward),
+  every live request is decoding, no pending arrival (or driver ``until``
+  bound) lands strictly inside the window, and no slot can finish inside
+  it (output_len margin), the engine runs j decode iterations in one
+  jitted ``lax.scan`` (``Model.decode_multi``) and commits j tokens per
+  slot off a single host sync. Per-step virtual-clock emit timestamps are
+  reconstructed EXACTLY: the clock is deterministic, so the commit loop
+  replays the identical ``iter_latency(B, ctx)`` tick sequence (context
+  grows by B per step) the one-step loop would have produced. j is
+  quantized to powers of two so scan compile count stays bounded. EOS is
+  unpredictable, so with ``eos_id`` enabled the scan may overshoot an
+  end-of-sequence: committing stops exactly where the one-step baseline
+  stops and the overshoot is discarded by the length gate
+  (models/cache.py: attention never reads past ``length``) — which is why
+  the EOS-enabled fast path is only legal on length-rollback-capable
+  caches (``supports_length_rollback``; SSM/hybrid state cannot roll
+  back, so those run multi-step only with EOS disabled, where the
+  output_len margin makes overshoot impossible). Wall-clock engines
+  (``clock="wall"``) cannot reconstruct per-step timestamps and always
+  single-step.
+
+``hotpath_stats()`` reports host syncs, prefill compile signatures, and
+multi-step block counts — benchmarks/engine_hotpath.py gates the speedup
+and compile-count claims on them.
 """
 from __future__ import annotations
 
 import bisect
+import dataclasses
 import functools
 import time
 from typing import Dict, List, Optional
@@ -59,6 +122,24 @@ from repro.serving.simulator import SimResult
 from repro.serving.speculative import DraftProposer, check_speculation_compatible
 
 
+@dataclasses.dataclass(frozen=True)
+class HotpathConfig:
+    """Engine hot-path optimization switches (module docstring; all
+    lossless and ON by default — the benchmark baseline is
+    ``HotpathConfig.baseline()``)."""
+    prefill_buckets: bool = True    # bucketed/batched/jitted prefill
+    bucket_min: int = 16            # smallest prompt-length bucket
+    fused_sampling: bool = True     # on-device argmax (+ spec accept scan)
+    multi_step: int = 8             # max decode iters per dispatch (1 = off)
+
+    @staticmethod
+    def baseline() -> "HotpathConfig":
+        """The pre-PR-5 hot path: eager exact-length batch-1 prefill,
+        full-logit host argmax, one decode iteration per dispatch."""
+        return HotpathConfig(prefill_buckets=False, fused_sampling=False,
+                             multi_step=1)
+
+
 def _slot_axis(leaf_ndim: int) -> int:
     return 0 if leaf_ndim == 1 else 1   # length (B,) vs (L, B, ...)
 
@@ -74,12 +155,154 @@ def _write_slot(cache, src, slot):
     return jax.tree.map(ins, cache, src)
 
 
+@jax.jit
+def _write_slots(cache, src, slots):
+    """Insert an N-row `src` pytree into `cache` at batch slots `slots`
+    ((N,) int32) — ONE fused scatter per leaf instead of N dispatches.
+    Rows whose slot id is out of range (row-bucket padding uses
+    num_slots as the sentinel) are dropped by the scatter."""
+    def ins(c, s):
+        ax = _slot_axis(c.ndim)
+        cm = jnp.moveaxis(c, ax, 0)
+        sm = jnp.moveaxis(s, ax, 0).astype(c.dtype)
+        return jnp.moveaxis(cm.at[slots].set(sm, mode="drop"), 0, ax)
+    return jax.tree.map(ins, cache, src)
+
+
 @functools.partial(jax.jit, static_argnames=("slot",))
 def _read_slot(cache, slot):
     def rd(c):
         ax = _slot_axis(c.ndim)
         return jax.lax.index_in_dim(c, slot, ax, keepdims=True)
     return jax.tree.map(rd, cache)
+
+
+class BucketedPrefill:
+    """Jitted, shape-bucketed prefill front-end for one model.
+
+    Pads a group of prompts (all mapping to the same length bucket —
+    the caller groups) to (row_bucket, len_bucket), runs one jitted
+    ``Model.prefill`` with per-row ``lengths`` masking, takes the
+    first-token argmax on device, and returns (first_ids (N,), cache rows)
+    for a fused `_write_slots` scatter. Compile count is bounded by
+    #length-buckets × #row-buckets; `shapes_seen` records the signatures
+    actually compiled (the compile-count regression gate)."""
+
+    def __init__(self, model: Model, cache_seq: int, cache_dtype, *,
+                 max_seq: int, bucket_min: int = 16):
+        self.model = model
+        self.cache_seq = cache_seq
+        self.cache_dtype = cache_dtype
+        self.enc_seq = model.enc_seq(max_seq)
+        # geometric (x2) grid from bucket_min; the terminal bucket is
+        # clamped to the physical cache depth (prefill writes the padded
+        # rows with dynamic_update_slice, which must fit) and still covers
+        # max_seq because cache_seq >= max_seq always
+        self.buckets: List[int] = []
+        b = max(2, int(bucket_min))
+        while b < max_seq and b < cache_seq:
+            self.buckets.append(b)
+            b *= 2
+        self.buckets.append(min(b, cache_seq))
+        self.shapes_seen = set()        # (rows, len_bucket) jit signatures
+        self._jit = jax.jit(self._call)
+
+    def bucket(self, n: int) -> int:
+        for b in self.buckets:
+            if n <= b:
+                return b
+        return self.buckets[-1]
+
+    @staticmethod
+    def row_bucket(n: int) -> int:
+        b = 1
+        while b < n:
+            b *= 2
+        return b
+
+    def _call(self, params, tokens, lengths, frames):
+        cache = self.model.init_cache(
+            tokens.shape[0], self.cache_seq, enc_seq=self.enc_seq,
+            dtype=self.cache_dtype,
+        )
+        batch = {"tokens": tokens, "lengths": lengths}
+        if self.enc_seq:
+            batch["frames"] = frames
+        logits, cache = self.model.prefill(params, batch, cache)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    def prefill_into(self, params, cache, slots, toks_list,
+                     frames_list=None, *, need_first=True):
+        """Grouped flush: prefill every (slot, tokens) pair and scatter the
+        rows into `cache` — one padded multi-row call + one fused
+        `_write_slots` per bucket group (grouping BY BUCKET keeps each
+        row bit-identical to its own batch-1 call). The single flush
+        implementation shared by the engine's admission path and the
+        draft proposer's cache build. Returns (cache', first_ids (N,)
+        int32 aligned with the inputs — zeros when need_first=False,
+        which also skips the device→host fetch — and the number of
+        device→host sync rounds performed)."""
+        groups: dict = {}
+        for i, t in enumerate(toks_list):
+            groups.setdefault(self.bucket(len(t)), []).append(i)
+        first_out = np.zeros(len(toks_list), np.int32)
+        oob = cache["length"].shape[0]          # row-pad scatter sentinel
+        syncs = 0
+        for bucket in sorted(groups):
+            idxs = groups[bucket]
+            first, src = self.run(
+                params, [toks_list[i] for i in idxs],
+                [frames_list[i] for i in idxs] if frames_list else None,
+            )
+            rows = src["length"].shape[0]
+            pad = np.full((rows,), oob, np.int32)
+            pad[: len(idxs)] = [slots[i] for i in idxs]
+            cache = _write_slots(cache, src, jnp.asarray(pad))
+            if need_first:
+                first = np.asarray(first)
+                syncs += 1
+                for j, i in enumerate(idxs):
+                    first_out[i] = first[j]
+        return cache, first_out, syncs
+
+    def run(self, params, toks_list, frames_list=None):
+        """Prefill one same-bucket group. toks_list: per-request token
+        arrays; returns (first_ids np (N,), padded cache rows)."""
+        n = len(toks_list)
+        rows = self.row_bucket(n)
+        seq = self.bucket(max(len(t) for t in toks_list))
+        tokens = np.zeros((rows, seq), np.int32)
+        lengths = np.zeros((rows,), np.int32)
+        for i, t in enumerate(toks_list):
+            tokens[i, : len(t)] = t
+            lengths[i] = len(t)
+        frames = 0
+        if self.enc_seq:
+            d = self.model.cfg.d_model
+            frames = np.zeros((rows, self.enc_seq, d), np.float32)
+            for i in range(n):
+                f = frames_list[i] if frames_list else None
+                if f is not None:
+                    frames[i] = f
+        self.shapes_seen.add((rows, seq))
+        first, cache = self._jit(
+            params, jnp.asarray(tokens), jnp.asarray(lengths),
+            jnp.asarray(frames) if self.enc_seq else None,
+        )
+        return first, cache
+
+
+@dataclasses.dataclass
+class _StagedPrefill:
+    """One admission whose host bookkeeping is done but whose device work
+    (prefill + slot write + first-token id) is deferred to the batched
+    flush. `emit_t` is the already-ticked first-token timestamp (None for
+    recompute resumes, which emit nothing at prefill)."""
+    req: Request
+    slot: int
+    toks: np.ndarray
+    emit_t: Optional[float]
+    frames: Optional[np.ndarray] = None
 
 
 class ServingEngine:
@@ -89,6 +312,9 @@ class ServingEngine:
     ServingSimulator's):
       submit(req)  enqueue an arrival (any time, in any order)
       step()       one scheduling+decode iteration; False when out of work
+                   (`until=t` bounds the multi-step fast path so the clock
+                   crosses t at the same single iteration it would when
+                   single-stepping — what Replica.advance_to passes)
       has_work     pending or live requests remain
       result()     SimResult over every request ever submitted
 
@@ -113,6 +339,7 @@ class ServingEngine:
         draft_model: Optional[Model] = None,
         draft_params=None,
         spec_k: int = 0,
+        hotpath: Optional[HotpathConfig] = None,
     ):
         self.model = model
         self.params = params
@@ -121,6 +348,7 @@ class ServingEngine:
         self.preemption_mode = preemption_mode
         self.clock = clock
         self.eos_id = eos_id
+        self.hotpath = hotpath if hotpath is not None else HotpathConfig()
         # optional lifecycle-event sink (repro.api): called as
         # sink(kind, request, t, k), kind in {"emit","preempt","finish"};
         # survives reset() so run() keeps reporting to an installed client
@@ -128,6 +356,9 @@ class ServingEngine:
         self.max_seq = max_seq
         self._num_slots = num_slots
         self._capacity_tokens = capacity_tokens
+        # EOS-enabled multi-step may overshoot and roll back by length —
+        # only legal on length-gated caches (models/cache.py)
+        self._rollback_ok = cache_lib.supports_length_rollback(model.cfg)
 
         # ---- speculative decoding (optional) --------------------------
         self.spec_k = int(spec_k)
@@ -146,16 +377,35 @@ class ServingEngine:
             self.draft = DraftProposer(
                 draft_model, draft_params, num_slots=num_slots,
                 max_seq=self._cache_seq, cache_dtype=cache_dtype,
+                bucketed=(BucketedPrefill(
+                    draft_model, self._cache_seq, cache_dtype,
+                    max_seq=max_seq, bucket_min=self.hotpath.bucket_min,
+                ) if self.hotpath.prefill_buckets else None),
             )
             self._verify = jax.jit(model.verify_step)
+            self._spec_fused = self._make_spec_fused()
         else:
             self.draft = None
 
-        enc_seq = max_seq // 4 if model.cfg.kind in ("encdec", "audio") else 0
         self.cache = model.init_cache(
-            num_slots, self._cache_seq, enc_seq=enc_seq, dtype=cache_dtype
+            num_slots, self._cache_seq, enc_seq=model.enc_seq(max_seq),
+            dtype=cache_dtype
         )
         self._decode = jax.jit(model.decode_step)
+        self._decode_tok = jax.jit(model.decode_tokens)
+        self._decode_multi = jax.jit(model.decode_multi,
+                                     static_argnames=("j",))
+        self._prefill = BucketedPrefill(
+            model, self._cache_seq, cache_dtype, max_seq=max_seq,
+            bucket_min=self.hotpath.bucket_min,
+        )
+        # MoE expert capacity is proportional to the TOTAL token count of
+        # the forward (padding included), so padding a prompt — or batching
+        # it with others — changes which tokens the capacity gate drops:
+        # bucketed prefill cannot be exact there. MoE engines keep the
+        # eager exact-length path (tests/test_hotpath.py pins the
+        # exclusion); every other family buckets and batches.
+        self._prefill_bucketable = model.cfg.kind != "moe"
         self.reset()
 
     # ------------------------------------------------------------------ state
@@ -178,23 +428,52 @@ class ServingEngine:
         self.total_tokens = 0
         self.iterations = 0
         self.batch_sizes: List[int] = []
-        self.pending: List[Request] = []     # submitted, not yet admitted
+        self._pending: List[Request] = []    # sorted arrivals; admitted
+        self._pending_pos = 0                #   prefix tracked by cursor
         self.live: List[Request] = []
         self.seen: List[Request] = []        # submit order
         self.stuck = False                   # deadlocked (cleared by submit)
+        self.host_syncs = 0                  # device→host transfer rounds
+        self.multi_step_blocks = 0           # fused multi-iteration dispatches
+        self.multi_step_iters = 0            # iterations committed by them
         self._wall0 = time.monotonic()
 
     def submit(self, req: Request) -> None:
-        """Enqueue an arrival. Stable insert keeps equal-arrival order."""
-        bisect.insort(self.pending, req, key=lambda r: r.arrival)
+        """Enqueue an arrival. Stable insert keeps equal-arrival order
+        (bisect_right above the admitted-prefix cursor — identical order
+        to the old insort-into-a-popped-list, without its O(n²) drain)."""
+        i = bisect.bisect_right(self._pending, req.arrival,
+                                lo=self._pending_pos,
+                                key=lambda r: r.arrival)
+        self._pending.insert(i, req)
         self.seen.append(req)
         # a new arrival may change the scheduler's choice even if the
         # current live set deadlocked — try again
         self.stuck = False
 
     @property
+    def pending(self) -> List[Request]:
+        """Submitted-but-not-admitted requests (protocol view; the hot loop
+        uses the cursor directly and never materializes this slice)."""
+        return self._pending[self._pending_pos:]
+
+    @property
     def has_work(self) -> bool:
-        return bool(self.pending or self.live)
+        return self._pending_pos < len(self._pending) or bool(self.live)
+
+    def hotpath_stats(self) -> dict:
+        """Hot-path instrumentation (benchmarks/engine_hotpath.py)."""
+        shapes = set(self._prefill.shapes_seen)
+        if self.spec_k and self.draft.bucketed is not None:
+            shapes |= self.draft.bucketed.shapes_seen
+        return {
+            "host_syncs": self.host_syncs,
+            "prefill_shapes": sorted(shapes),
+            "prefill_compiles": len(shapes),
+            "prefill_bucket_grid": list(self._prefill.buckets),
+            "multi_step_blocks": self.multi_step_blocks,
+            "multi_step_iters": self.multi_step_iters,
+        }
 
     # ---------------------------------------------------------------- clock
     def _tick(self, seconds: float) -> None:
@@ -204,21 +483,104 @@ class ServingEngine:
             self.now = time.monotonic() - self._wall0
 
     # -------------------------------------------------------------- prefill
-    def _prefill_request(self, r: Request) -> None:
-        """Run the prompt (plus any generated prefix on recompute)."""
+    def _prompt_tokens(self, r: Request) -> np.ndarray:
+        """The request's committed context: prompt (synthesized
+        deterministically from the rid for token-less simulator-style
+        requests) plus any generated prefix (recompute resume)."""
         if r.prompt_tokens is None:
-            # simulator-style request (length only, no token ids) — e.g.
-            # routed by the cluster layer from a synthetic trace. Derive a
-            # deterministic prompt from the rid so reruns are reproducible.
             rng = np.random.default_rng(r.rid)
             r.prompt_tokens = rng.integers(
                 0, self.model.cfg.vocab_size, r.prompt_len
             ).astype(np.int32)
-        toks = np.concatenate([
+        return np.concatenate([
             np.asarray(r.prompt_tokens, np.int32),
             np.asarray(r.output_tokens[: r.generated], np.int32),
         ])
-        enc_seq = self.max_seq // 4 if self.model.cfg.kind in ("encdec", "audio") else 0
+
+    def _can_stage_prefill(self, r: Request) -> bool:
+        """May this admission join the step's batched prefill? The staged
+        flush defers only the first token's *value*; it must not be able
+        to finish the request mid-admission (slot reuse), so EOS-enabled
+        engines and single-token responses take the sequential path."""
+        if not self.hotpath.prefill_buckets or not self._prefill_bucketable:
+            return False
+        return r.generated > 0 or (self.eos_id < 0 and r.output_len > 1)
+
+    def _stage_prefill(self, r: Request) -> _StagedPrefill:
+        """Host half of one admission: slot allocation, the prefill tick,
+        and (for fresh requests) the first-token emission bookkeeping —
+        everything the sequential path does except the token id itself,
+        which `_flush_prefills` fills in after the batched device call.
+        Clock/fluid/KV state is therefore bit-identical to sequential
+        admission regardless of how many requests share the flush."""
+        toks = self._prompt_tokens(r)
+        slot = self.kv.allocate(r)
+        self.slot_req[slot] = r
+        self._tick(self.lat.prefill_latency(len(toks)))
+        emit_t = None
+        if r.generated == 0:
+            emit_t = self.now
+            r.generated = 1
+            r.emit_times.append(emit_t)
+            self.fluid.emit(r.fluid_idx, emit_t, 1)
+            self.kv.grow(r)
+            self.total_tokens += 1
+        frames = getattr(r, "frames", None) if self._prefill.enc_seq else None
+        return _StagedPrefill(r, slot, toks, emit_t, frames)
+
+    def _flush_prefills(self, staged: List[_StagedPrefill]) -> None:
+        """Run every staged admission's device work (the shared
+        `BucketedPrefill.prefill_into` grouped flush). First-token
+        emissions finalize in STAGED (admission) order, not group order,
+        so event-sink consumers observe the same chronology the
+        sequential path produces."""
+        if not staged:
+            return
+        slots = [rec.slot for rec in staged]
+        self.cache, first, syncs = self._prefill.prefill_into(
+            self.params, self.cache, slots,
+            [rec.toks for rec in staged],
+            [rec.frames for rec in staged],
+        )
+        self.host_syncs += syncs
+        if self.spec_k:
+            # draft invariant: committed[:-1] — the full staged context
+            # for fresh prefills (their first token was committed at
+            # stage time), minus the trailing token on recompute resume
+            self.draft.prefill_batch(
+                slots,
+                [rec.toks if rec.emit_t is not None else rec.toks[:-1]
+                 for rec in staged],
+            )
+        for i, rec in enumerate(staged):
+            if rec.emit_t is not None:
+                rec.req.output_tokens.append(int(first[i]))
+                if self.event_sink is not None:
+                    self.event_sink("emit", rec.req, rec.emit_t, 1)
+
+    def _prefill_request(self, r: Request) -> None:
+        """Run the prompt (plus any generated prefix on recompute) —
+        the sequential path: one request, one prefill, one slot write.
+        With the hot path enabled this is the staged machinery applied to
+        a single request (same bucketed jitted call the batched flush
+        makes, so sequential ≡ batched bit-for-bit); the legacy eager
+        exact-length path survives underneath as the benchmark baseline."""
+        if self.hotpath.prefill_buckets and self._prefill_bucketable:
+            # batch-1 through the bucketed jitted path (the EOS and
+            # single-token fallback — cases `_can_stage_prefill` excludes
+            # from multi-request flushes; MoE never reaches here)
+            rec = self._stage_prefill(r)
+            self._flush_prefills([rec])
+            if rec.emit_t is not None:
+                # replay `_emit`'s done check, which the deferred-token
+                # staging skips: the first token may finish the request
+                tok = r.output_tokens[-1]
+                if (r.generated >= r.output_len
+                        or (self.eos_id >= 0 and tok == self.eos_id)):
+                    self._finish(r)
+            return
+        toks = self._prompt_tokens(r)
+        enc_seq = self.model.enc_seq(self.max_seq)
         kv_dtype = self.cache["k"].dtype if "k" in self.cache \
             else self.cache["ssm_conv"].dtype
         one = self.model.init_cache(
@@ -231,6 +593,7 @@ class ServingEngine:
                                else jnp.zeros((1, enc_seq, self.model.cfg.d_model),
                                               jnp.float32))
         logits, one = self.model.prefill(self.params, batch, one)
+        self._prefill.shapes_seen.add((1, len(toks)))   # exact-length compile
         slot = self.kv.allocate(r)
         self.cache = _write_slot(self.cache, one, slot)
         self.slot_req[slot] = r
@@ -243,6 +606,7 @@ class ServingEngine:
         self._tick(self.lat.prefill_latency(len(toks)))
         if r.generated == 0:
             tok = int(jnp.argmax(logits[0]))
+            self.host_syncs += 1
             self._emit(r, tok)
 
     # ---------------------------------------------------------------- emit
@@ -307,6 +671,7 @@ class ServingEngine:
         slot = r.engine_slot
         if self.preemption_mode == "swap":
             host_slice = jax.device_get(_read_slot(self.cache, slot))
+            self.host_syncs += 1
             draft_slice = self.draft.park(slot) if self.spec_k else None
             self.kv.swap_out(r, host_slice, draft_slice)
             r.state = ReqState.SWAPPED
@@ -334,6 +699,30 @@ class ServingEngine:
         self._tick(self.lat.swap_latency(r.context_len))
 
     # ------------------------------------------------------- speculative
+    def _make_spec_fused(self):
+        """One jitted dispatch for a whole speculative iteration: draft
+        propose → window concat → target verify → greedy argmax → accepted
+        prefix length (cumprod-of-matches scan) — all on device, so
+        `_speculative_iteration` syncs exactly once and the transfer is
+        three small int arrays instead of (slots, k+1, vocab) logits."""
+        model, k = self.model, self.spec_k
+        dmodel = self.draft.model
+
+        def fn(params, dparams, tokens, target_cache, draft_cache):
+            props, draft_cache = dmodel.propose_step(
+                dparams, tokens, draft_cache, k
+            )
+            window = jnp.concatenate([tokens[:, None], props[:, :k]], axis=1)
+            logits, target_cache = model.verify_step(
+                params, window, target_cache
+            )
+            greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            match = (window[:, 1:] == greedy[:, :k]).astype(jnp.int32)
+            accepted = jnp.sum(jnp.cumprod(match, axis=1), axis=1)
+            return window, greedy, accepted, target_cache, draft_cache
+
+        return jax.jit(fn)
+
     def _speculative_iteration(self, active, lengths, tokens,
                                total_ctx: int) -> None:
         """Draft-propose k tokens per running slot, verify the whole window
@@ -343,20 +732,40 @@ class ServingEngine:
         # draft cache holds committed[:-1]; its next write goes one position
         # below the target's (speculative.py invariant)
         draft_lengths = np.maximum(lengths - 1, 0).astype(np.int32)
-        proposals = self.draft.propose(tokens, draft_lengths, k)
-        window = np.concatenate([tokens[:, None], proposals], axis=1)
-        logits, self.cache = self._verify(
-            self.params, jnp.asarray(window), self.cache
-        )
-        # one step's cost: k+1 draft decodes + the fused verify (the
-        # SpeculativeLatencyModel's iter_latency — same call as baseline)
-        self._tick(self.lat.iter_latency(len(active), total_ctx))
-        greedy = np.asarray(jnp.argmax(logits, axis=-1))    # (slots, k+1)
+        if self.hotpath.fused_sampling:
+            self.draft.cache = cache_lib.with_lengths(
+                self.draft.cache, draft_lengths
+            )
+            window, greedy, accepted, self.cache, self.draft.cache = \
+                self._spec_fused(self.params, self.draft.params,
+                                 jnp.asarray(tokens), self.cache,
+                                 self.draft.cache)
+            self._tick(self.lat.iter_latency(len(active), total_ctx))
+            window, greedy, accepted = jax.device_get(
+                (window, greedy, accepted)
+            )
+            self.host_syncs += 1
+        else:
+            proposals = self.draft.propose(tokens, draft_lengths, k)
+            self.host_syncs += 1
+            window = np.concatenate([tokens[:, None], proposals], axis=1)
+            logits, self.cache = self._verify(
+                self.params, jnp.asarray(window), self.cache
+            )
+            # one step's cost: k+1 draft decodes + the fused verify (the
+            # SpeculativeLatencyModel's iter_latency — same call as baseline)
+            self._tick(self.lat.iter_latency(len(active), total_ctx))
+            greedy = np.asarray(jnp.argmax(logits, axis=-1))  # (slots, k+1)
+            self.host_syncs += 1
+            accepted = None
         for s, r in list(active.items()):
             d, g = window[s, 1:], greedy[s]
-            a = 0
-            while a < k and d[a] == g[a]:
-                a += 1
+            if accepted is not None:
+                a = int(accepted[s])
+            else:
+                a = 0
+                while a < k and d[a] == g[a]:
+                    a += 1
             # logical max_seq bound: the cache slack (_cache_seq) makes
             # every window position's logits well-defined, but committed
             # context must never exceed what a baseline engine could hold
@@ -380,23 +789,122 @@ class ServingEngine:
                                 if self.spec_proposed else 0.0),
         }
 
+    # ------------------------------------------------------ multi-step decode
+    def _multi_step_plan(self, active, total_ctx: int,
+                         until: Optional[float]) -> int:
+        """Largest j (quantized to a power of two) for which running j
+        decode iterations in one fused scan is *provably* bit-identical to
+        single-stepping — see the module docstring for the full invariant.
+        Returns 1 whenever any condition fails."""
+        cap = self.hotpath.multi_step
+        if cap <= 1 or self.spec_k or self.clock != "virtual":
+            return 1
+        if len(active) != len(self.live):
+            return 1                    # a waiting/swapped request needs
+                                        # the per-iteration scheduler
+        if self.eos_id >= 0 and not self._rollback_ok:
+            return 1                    # overshoot would be unrecoverable
+        margin = min(r.output_len - r.generated for r in active.values())
+        j_max = min(cap, margin)
+        if j_max < 2:
+            return 1
+        j_max = min(j_max, self.sched.idle_steps(self.live, j_max - 1) + 1)
+        if j_max < 2:
+            return 1
+        # arrival/driver bound: every INTERMEDIATE step end must stay
+        # strictly before the next pending arrival and the driver's
+        # `until`, so admission lands at the same iteration boundary as
+        # single-stepping (the block's last step may cross — that is
+        # exactly the crossing iteration the baseline runs)
+        bound = np.inf
+        if self._pending_pos < len(self._pending):
+            bound = self._pending[self._pending_pos].arrival
+        if until is not None:
+            bound = min(bound, until)
+        j = 1
+        if bound != np.inf:
+            t = self.now
+            ticks = self.lat.iter_latency_schedule(
+                len(active), total_ctx, j_max
+            )
+            while j < j_max:
+                t = t + ticks[j - 1]                    # end of step j
+                if not (t < bound):
+                    break
+                j += 1
+        else:
+            j = j_max
+        if j < 2:
+            return 1
+        return 1 << (j.bit_length() - 1)        # pow-2 compile grid
+
+    def _multi_step_decode(self, active, tokens, total_ctx: int,
+                           j: int) -> int:
+        """Run j fused decode iterations and commit their tokens with the
+        exact per-step clock/fluid bookkeeping the one-step loop performs
+        (same `iter_latency` tick sequence — context grows by B per step —
+        same per-slot emit order). Returns iterations committed (< j only
+        when an EOS landed mid-block: the remainder is discarded and the
+        length gate rolls the cache back)."""
+        ids, self.cache = self._decode_multi(
+            self.params, jnp.asarray(tokens), self.cache, j=j
+        )
+        ids = np.asarray(ids)                   # ONE sync for j iterations
+        self.host_syncs += 1
+        self.multi_step_blocks += 1
+        items = list(active.items())
+        b = len(items)
+        ticks = self.lat.iter_latency_schedule(b, total_ctx, j)
+        committed = 0
+        for s in range(j):
+            if s:
+                self.batch_sizes.append(b)
+            self._tick(ticks[s])
+            finished = False
+            for slot, r in items:
+                self._emit(r, int(ids[s, slot]))
+                finished = finished or not r.is_live
+            committed += 1
+            if finished and committed < j:
+                break       # batch composition changes next iteration;
+                            # drop the overshoot (length-gate rollback)
+        self.multi_step_iters += committed
+        self.sched.skip_iterations(committed - 1)
+        return committed
+
     # ----------------------------------------------------------- main loop
     def _admit_arrivals(self) -> None:
-        while self.pending and self.pending[0].arrival <= self.now:
-            r = self.pending.pop(0)
+        pend = self._pending
+        pos = self._pending_pos
+        while pos < len(pend) and pend[pos].arrival <= self.now:
+            r = pend[pos]
+            pos += 1
             r.fluid_idx = self.fluid.add(r.arrival, r.spec)
             r.state = ReqState.WAITING
             self.live.append(r)
             self.sched.on_request_arrival(r)
+        self._pending_pos = pos
+        # amortized compaction: drop the consumed prefix once it dominates
+        if pos and pos * 2 >= len(pend):
+            del pend[:pos]
+            self._pending_pos = 0
 
-    def step(self) -> bool:
+    def step(self, until: Optional[float] = None) -> bool:
         """One continuous-batching iteration (schedule → preempt →
-        swap-in/prefill → one real decode over all occupied slots).
-        Returns False when there is nothing left to do."""
-        if self.stuck or not (self.pending or self.live):
+        swap-in/prefill → decode over all occupied slots). Returns False
+        when there is nothing left to do.
+
+        `until`: incremental drivers that will submit more work once the
+        clock reaches t (Replica.advance_to) pass it so the multi-step
+        fast path never skips past t inside one block — the clock then
+        crosses t at the same single iteration it would when
+        single-stepping, keeping routed-engine timelines bit-identical to
+        submit-everything-upfront runs. Single-step behavior is unaffected
+        (iterations are indivisible; the crossing step still overshoots)."""
+        if self.stuck or not self.has_work:
             return False
-        if not self.live and self.pending:
-            self.now = max(self.now, self.pending[0].arrival)
+        if not self.live and self._pending_pos < len(self._pending):
+            self.now = max(self.now, self._pending[self._pending_pos].arrival)
         self._admit_arrivals()
         if not self.live:
             return True
@@ -410,6 +918,7 @@ class ServingEngine:
                 self._preempt(r)
                 n_preempted += 1
         n_admitted = 0
+        staged: List[_StagedPrefill] = []
         for r in target:
             if r.state == ReqState.SWAPPED and self.kv.can_allocate(r):
                 self._swap_in(r)
@@ -417,13 +926,24 @@ class ServingEngine:
             elif r.state == ReqState.WAITING and self.kv.can_allocate(r):
                 r.state = ReqState.RUNNING
                 r.prefilled = True
-                self._prefill_request(r)
+                if self._can_stage_prefill(r):
+                    staged.append(self._stage_prefill(r))
+                else:
+                    # a sequential prefill fires its emit (and possibly
+                    # finish) events inline — flush what is staged first
+                    # so event-sink chronology matches the sequential
+                    # path (earlier admissions report first)
+                    self._flush_prefills(staged)
+                    staged = []
+                    self._prefill_request(r)
                 n_admitted += 1
+        self._flush_prefills(staged)
 
-        # ---- one decode iteration over all occupied slots -------------
+        # ---- decode over all occupied slots ---------------------------
         active = {s: r for s, r in self.slot_req.items()
                   if r.state == ReqState.RUNNING}
         self.batch_sizes.append(len(active))
+        committed_iters = 1
         if active:
             lengths = np.zeros(self.kv.num_slots, np.int32)
             tokens = np.zeros(self.kv.num_slots, np.int32)
@@ -436,17 +956,33 @@ class ServingEngine:
                 self._speculative_iteration(active, lengths, tokens,
                                             total_ctx)
             else:
-                logits, self.cache = self._decode(
-                    self.params, jnp.asarray(tokens), self.cache
-                )
-                self._tick(self.lat.iter_latency(len(active), total_ctx))
-                nxt = np.asarray(jnp.argmax(logits, axis=-1))
-                for s, r in list(active.items()):
-                    self._emit(r, int(nxt[s]))
+                j = self._multi_step_plan(active, total_ctx, until)
+                if j > 1:
+                    committed_iters = self._multi_step_decode(
+                        active, tokens, total_ctx, j
+                    )
+                elif self.hotpath.fused_sampling:
+                    ids, self.cache = self._decode_tok(
+                        self.params, jnp.asarray(tokens), self.cache
+                    )
+                    self._tick(self.lat.iter_latency(len(active), total_ctx))
+                    nxt = np.asarray(ids)
+                    self.host_syncs += 1
+                    for s, r in list(active.items()):
+                        self._emit(r, int(nxt[s]))
+                else:
+                    logits, self.cache = self._decode(
+                        self.params, jnp.asarray(tokens), self.cache
+                    )
+                    self._tick(self.lat.iter_latency(len(active), total_ctx))
+                    nxt = np.asarray(jnp.argmax(logits, axis=-1))
+                    self.host_syncs += 1
+                    for s, r in list(active.items()):
+                        self._emit(r, int(nxt[s]))
         else:
             self._tick(self.lat.hw.overhead)
 
-        self.iterations += 1
+        self.iterations += committed_iters
         self.live = [r for r in self.live if r.is_live]
         n_live = len(self.live)
         self._admit_arrivals()
@@ -463,7 +999,8 @@ class ServingEngine:
         # clock keeps advancing by the overhead tick exactly as the
         # legacy loop did, preserving bit-for-bit admission times.
         if not active and not n_admitted and not n_preempted \
-                and not newly_arrived and not self.pending:
+                and not newly_arrived \
+                and self._pending_pos >= len(self._pending):
             self.stuck = True                # a later submit() may clear it
             return False
         return True

@@ -110,7 +110,8 @@ class ServingSimulator:
     # ------------------------------------------------------------------ state
     def reset(self) -> None:
         self.fluid = FluidQoE()
-        self.pending: List[Request] = []     # sorted by arrival
+        self._pending: List[Request] = []    # sorted arrivals; admitted
+        self._pending_pos = 0                #   prefix tracked by cursor
         self.live: List[Request] = []
         self.now = 0.0
         self.total_tokens = 0
@@ -123,34 +124,57 @@ class ServingSimulator:
         self.seen: List[Request] = []        # submit order
 
     def submit(self, req: Request) -> None:
-        """Enqueue an arrival. Stable insert keeps equal-arrival order."""
-        bisect.insort(self.pending, req, key=lambda r: r.arrival)
+        """Enqueue an arrival. Stable insert keeps equal-arrival order
+        (bisect_right above the admitted-prefix cursor — identical order
+        to the old insort-into-a-popped-list, without its O(n²) drain)."""
+        i = bisect.bisect_right(self._pending, req.arrival,
+                                lo=self._pending_pos,
+                                key=lambda r: r.arrival)
+        self._pending.insert(i, req)
         self.seen.append(req)
         # a new arrival may be schedulable even if the current live set
         # deadlocked (e.g. an oversized prompt) — try again
         self.stuck = False
 
     @property
+    def pending(self) -> List[Request]:
+        """Submitted-but-not-admitted requests (protocol view; the hot loop
+        uses the cursor directly and never materializes this slice)."""
+        return self._pending[self._pending_pos:]
+
+    @property
     def has_work(self) -> bool:
-        return bool(self.pending or self.live)
+        return self._pending_pos < len(self._pending) or bool(self.live)
 
     # ---------------------------------------------------------------- helpers
     def _admit_arrivals(self, t: float) -> None:
-        while self.pending and self.pending[0].arrival <= t:
-            r = self.pending.pop(0)
+        pend = self._pending
+        pos = self._pending_pos
+        while pos < len(pend) and pend[pos].arrival <= t:
+            r = pend[pos]
+            pos += 1
             r.fluid_idx = self.fluid.add(r.arrival, r.spec)
             r.state = ReqState.WAITING
             self.live.append(r)
             self.sched.on_request_arrival(r)
+        self._pending_pos = pos
+        # amortized compaction: drop the consumed prefix once it dominates
+        if pos and pos * 2 >= len(pend):
+            del pend[:pos]
+            self._pending_pos = 0
 
     # ------------------------------------------------------------------- step
-    def step(self) -> bool:
+    def step(self, until: Optional[float] = None) -> bool:
         """One continuous-batching iteration. Returns False when there is
-        nothing left to do (drained or past max_sim_time)."""
-        if self.halted or self.stuck or not (self.pending or self.live):
+        nothing left to do (drained or past max_sim_time). `until` is
+        accepted for SteppableBackend drive parity (Replica.advance_to
+        passes it to bound the engine's multi-step fast path); simulator
+        iterations are always indivisible, so it is a no-op here."""
+        if self.halted or self.stuck or not self.has_work:
             return False
         if not self.live:
-            self.now = max(self.now, self.pending[0].arrival)
+            self.now = max(self.now,
+                           self._pending[self._pending_pos].arrival)
         self._admit_arrivals(self.now)
         if not self.live:
             return True
@@ -260,8 +284,9 @@ class ServingSimulator:
         # advances `now` by wall time even in an idle iteration.)
         if iter_extra == 0.0 and not decoders and not first_emits \
                 and not newly_preempted:
-            if self.pending:
-                self.now = max(self.now, self.pending[0].arrival)
+            if self._pending_pos < len(self._pending):
+                self.now = max(self.now,
+                               self._pending[self._pending_pos].arrival)
             else:
                 self.stuck = True            # a later submit() may clear it
                 return False

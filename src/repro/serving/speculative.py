@@ -63,7 +63,14 @@ def check_speculation_compatible(target: Model, draft: Model) -> None:
 
 
 class DraftProposer:
-    """Slot-parallel greedy proposer over a shared draft (model, params)."""
+    """Slot-parallel greedy proposer over a shared draft (model, params).
+
+    `bucketed` (a serving.engine.BucketedPrefill over the draft model)
+    routes draft prefills through the same jitted shape-bucketed path the
+    engine's target prefills use: admissions flushed in one step build
+    their draft KV in one padded multi-row call + one fused slot scatter
+    (`prefill_batch`), bounding draft prefill compiles by the bucket grid.
+    None (hot path off) keeps the eager exact-length batch-1 path."""
 
     def __init__(
         self,
@@ -73,16 +80,21 @@ class DraftProposer:
         num_slots: int,
         max_seq: int,
         cache_dtype=jnp.float32,
+        bucketed=None,
     ):
         self.model = model
         self.params = params
         self.max_seq = max_seq
+        self.bucketed = bucketed
         self.cache = model.init_cache(num_slots, max_seq, dtype=cache_dtype)
         self._propose = jax.jit(model.propose_step, static_argnames=("k",))
 
     # ---- per-slot cache lifecycle (mirrors the engine's target cache) ------
     def prefill(self, slot: int, tokens: np.ndarray) -> None:
         """Build the draft KV for a request's committed-minus-last prefix."""
+        if self.bucketed is not None:
+            self.prefill_batch([slot], [tokens])
+            return
         from repro.serving.engine import _write_slot
         one = self.model.init_cache(
             1, self.max_seq, dtype=self.cache["k"].dtype
@@ -91,6 +103,19 @@ class DraftProposer:
             self.params, {"tokens": jnp.asarray(tokens, jnp.int32)[None]}, one
         )
         self.cache = _write_slot(self.cache, one, slot)
+
+    def prefill_batch(self, slots, toks_list) -> None:
+        """Bucketed multi-row draft prefill — the same grouped
+        `BucketedPrefill.prefill_into` flush the engine's admission path
+        uses (one padded call + one fused scatter per bucket group; each
+        row bit-identical to a batch-1 prefill of the same request, so the
+        slot-parallel propose scans see exactly the state the sequential
+        path would have built). The draft never needs first-token ids, so
+        the flush skips the device→host fetch entirely."""
+        self.cache, _, _ = self.bucketed.prefill_into(
+            self.params, self.cache, list(slots), list(toks_list),
+            need_first=False,
+        )
 
     def park(self, slot: int) -> dict:
         """Fetch a slot's draft slice to host (preemption swap-out)."""

@@ -246,7 +246,10 @@ def test_incremental_submit_equals_upfront(llama):
     """Cluster-style drive: step to each arrival, submit, continue. The
     request is admitted at the same iteration boundary as the all-upfront
     run, so the timelines are identical (this is the invariant that makes
-    a routed engine replica ≡ a bare engine)."""
+    a routed engine replica ≡ a bare engine). Like Replica.advance_to,
+    the driver passes `until` so the engine's multi-step fast path — which
+    the upfront run bounds by its visible pending queue — never fuses
+    past an arrival this driver has not submitted yet."""
     cfg, m, params = llama
     lat = LatencyModel(cfg, TPU_V5E)
     rng = np.random.default_rng(3)
@@ -261,7 +264,7 @@ def test_incremental_submit_equals_upfront(llama):
         # replica.advance_to(r.arrival): run iterations until the clock
         # reaches the arrival (may overshoot — iterations are indivisible)
         while b.has_work and b.now < r.arrival:
-            if not b.step():
+            if not b.step(until=r.arrival):
                 break
         b.submit(r)
     while b.step():
