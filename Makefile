@@ -2,8 +2,8 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast test-slow bench bench-api bench-cluster \
-        bench-cluster-engine bench-hotpath bench-spec example-quickstart \
-        example-cluster example-cluster-engine
+        bench-cluster-engine bench-hotpath bench-obs bench-spec \
+        example-quickstart example-cluster example-cluster-engine
 
 # ---- test tiers -----------------------------------------------------------
 # tier-1  (make test-fast): everything NOT marked `slow` — the ROADMAP.md
@@ -49,6 +49,12 @@ bench-spec:
 # nonzero if any gate fails, which is what the CI job relies on)
 bench-hotpath:
 	$(PYTHON) -m benchmarks.engine_hotpath
+
+# observability overhead/correctness only (PR 6): instrumented engine must
+# be bit-identical, trace must reconcile to reported QoE, throughput
+# overhead <= the gate; validates without rewriting BENCH_hotpath.json
+bench-obs:
+	$(PYTHON) -m benchmarks.engine_hotpath --obs
 
 example-quickstart:
 	$(PYTHON) examples/quickstart.py

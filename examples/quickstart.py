@@ -14,8 +14,19 @@ The same client fronts the discrete-event simulator, this real JAX model
 engine, its speculative variant, or a whole multi-replica cluster
 (examples/serve_cluster.py).
 
+A second thread (PR 6): the observability layer. Attaching a
+`TraceRecorder` + `MetricsObserver` records every lifecycle event and
+rolls up TTFT/TDS/QoE metrics WITHOUT changing a single emitted token or
+timestamp (the tests pin that bit-for-bit); this script prints one
+request's traced token timeline, dumps a metrics snapshot, and writes
+the trace (JSONL + Perfetto-loadable Chrome JSON) and metrics
+(Prometheus text + JSON) artifacts next to the working directory.
+
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
+import json
+import pathlib
+
 import jax
 import numpy as np
 
@@ -23,6 +34,8 @@ from repro.api import ServingClient, SLOContract, SubmitOptions
 from repro.configs import get_smoke_config
 from repro.core import LatencyModel, QoESpec, TPU_V5E, make_scheduler
 from repro.models import Model
+from repro.obs import (MetricsObserver, MetricsRegistry, TraceRecorder,
+                       register_backend_gauges)
 from repro.serving import ServingEngine
 
 # --- 1. a tiny Llama-family model behind the Andes scheduler ----------------
@@ -34,8 +47,15 @@ engine = ServingEngine(model, params,
                        make_scheduler("andes", kv_capacity=160, lat=lat),
                        lat, num_slots=3, max_seq=64, capacity_tokens=160)
 
+# --- 1b. observability: trace + metrics riding along, zero behavior change --
+trace = TraceRecorder()                       # every lifecycle event, typed
+registry = MetricsRegistry()
+engine.attach_observer(trace)
+engine.attach_observer(MetricsObserver(registry))
+register_backend_gauges(registry, engine)     # live KV occupancy gauges
+
 # --- 2. one client session; a burst of prompts with QoE expectations --------
-client = ServingClient(engine)
+client = ServingClient(engine)                # composes with the observers
 rng = np.random.default_rng(0)
 reading = QoESpec(ttft=1.0, tds=4.8)          # 1 s first token, reading pace
 handles = []
@@ -63,3 +83,32 @@ for h in handles:
 print(f"\navg QoE {client.avg_qoe():.3f} | "
       f"{engine.preemptions} preemptions | "
       f"{engine.total_tokens} tokens generated")
+
+# --- 4. what the trace saw: one request's token timeline --------------------
+rid = handles[0].rid
+print(f"\ntraced timeline of request {rid}:")
+for ev in trace.events:
+    if ev.rid == rid and ev.kind not in ("sync", "dispatch"):
+        extra = {k: v for k, v in ev.data.items() if k != "scores"}
+        print(f"   t={ev.t:7.3f}s  {ev.kind:<12} {extra}")
+
+# --- 5. final metrics snapshot, and the artifacts on disk -------------------
+print("\nmetrics snapshot:")
+for name in ("requests_finished_total", "tokens_emitted_total",
+             "weighted_attainment", "kv_peak_utilization"):
+    print(f"   {name:<28} {registry.value(name):g}")
+total_preempts = sum(v for _, _, v
+                     in registry.get("preemptions_total").samples())
+print(f"   preemptions_total            {total_preempts:g}")
+ttft = registry.get("ttft_seconds")
+print(f"   ttft_seconds                 count {ttft.count()} "
+      f"mean {ttft.sum() / max(ttft.count(), 1):.2f}s")
+
+out = pathlib.Path(".")
+trace.save_jsonl(out / "quickstart_trace.jsonl")
+trace.save_chrome_trace(out / "quickstart_trace.perfetto.json")
+(out / "quickstart_metrics.prom").write_text(registry.to_prometheus())
+(out / "quickstart_metrics.json").write_text(
+    json.dumps(registry.to_json(), indent=2) + "\n")
+print("\nwrote quickstart_trace.jsonl / quickstart_trace.perfetto.json "
+      "(load in ui.perfetto.dev) and quickstart_metrics.{prom,json}")

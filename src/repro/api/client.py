@@ -15,11 +15,15 @@ is the single user-facing surface:
 
 Anything exposing the steppable protocol (`submit/step/result/now` —
 `ServingSimulator`, `ServingEngine` with or without speculation, and the
-steppable `ClusterSimulator`) plugs in unchanged; the client installs one
-lifecycle-event sink on the backend and fans events out to per-request
-`StreamHandle`s. Driving a backend through the client is bit-identical to
-driving it directly (tests/test_api.py: emit timestamps, preemptions, and
-final QoE per request) — the client adds an API, never a behavior.
+steppable `ClusterSimulator`) plugs in unchanged; the client attaches one
+`repro.obs.Observer` to the backend and fans lifecycle events out to
+per-request `StreamHandle`s (backends predating the observer protocol get
+the legacy `event_sink` callable instead). Attaching — rather than
+setting — means client streaming composes with any tracing/metrics
+observers the caller installed: PR 4's private sink plumbing is gone.
+Driving a backend through the client is bit-identical to driving it
+directly (tests/test_api.py: emit timestamps, preemptions, and final QoE
+per request) — the client adds an API, never a behavior.
 
 `SubmitOptions` carries the request's identity in the serving economy:
 its QoE expectation (`spec`), tenant, priority class, and `SLOContract`
@@ -37,6 +41,7 @@ from repro.core.pricing import SLOContract
 from repro.core.qoe import QoESpec
 from repro.core.request import Request
 from repro.api.stream import StreamHandle
+from repro.obs import Observer
 
 # reading-speed default: 1 s to first token, 4.8 tokens/s thereafter
 # (the paper's expected human reading pace, Table 1)
@@ -66,6 +71,37 @@ class SubmitOptions:
     arrival: Optional[float] = None
 
 
+class _ClientObserver(Observer):
+    """Fans backend lifecycle hooks out to the client's StreamHandles.
+
+    Only the five stream-visible kinds are forwarded; every other hook
+    inherits the null base. Handles are looked up by object identity, so
+    a backend shared with other submitters never cross-talks."""
+
+    def __init__(self, client: "ServingClient"):
+        self._client = client
+
+    def _fwd(self, kind: str, req: Request, t: float, k: int = 0) -> None:
+        h = self._client._handles.get(id(req))
+        if h is not None:
+            h._event(kind, t, k)
+
+    def emit(self, req, t, k=1, *, replica=-1):
+        self._fwd("emit", req, t, k)
+
+    def preempt(self, req, t, mode="swap", *, replica=-1):
+        self._fwd("preempt", req, t)
+
+    def finish(self, req, t, *, replica=-1):
+        self._fwd("finish", req, t)
+
+    def shed(self, req, t, *, replica=-1):
+        self._fwd("shed", req, t)
+
+    def defer(self, req, t, *, replica=-1):
+        self._fwd("defer", req, t)
+
+
 class ServingClient:
     """Client sessions over one backend (see module docstring)."""
 
@@ -74,11 +110,12 @@ class ServingClient:
         self._handles: Dict[int, StreamHandle] = {}     # id(request) -> h
         self._rids: set = set()                         # every rid in use
         self._next_rid = 0
-        # one sink for the whole backend; the cluster propagates it to
-        # every replica backend, including autoscaler-provisioned ones
-        if hasattr(backend, "set_event_sink"):
-            backend.set_event_sink(self._on_event)
-        else:
+        # one observer for the whole backend; the cluster propagates it to
+        # every replica backend, including autoscaler-provisioned ones.
+        self._observer = _ClientObserver(self)
+        if hasattr(backend, "attach_observer"):
+            backend.attach_observer(self._observer)
+        else:  # foreign backend predating repro.obs: legacy callable sink
             backend.event_sink = self._on_event
 
     # ------------------------------------------------------------- plumbing

@@ -53,6 +53,14 @@ class AdmissionController:
         self.n_shed = 0
         self.n_defer_events = 0
 
+    def counters(self) -> Dict[str, int]:
+        """Decision tallies for observability (metrics gauges / reports)."""
+        return {
+            "shed": self.n_shed,
+            "defer_events": self.n_defer_events,
+            "deferred_requests": len(self._defers),
+        }
+
     def decide(self, req: Request, decision: RouteDecision,
                now: float) -> str:
         """ADMIT/SHED/DEFER for `req` given the router's chosen placement."""

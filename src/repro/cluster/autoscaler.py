@@ -49,6 +49,9 @@ class ScaleEvent:
     t: float
     action: str                    # scale_up | scale_down | reap
     replica_id: int                # -1 for scale_up (id assigned on ready)
+    signal: Optional[dict] = None  # attainment/utilization snapshot that
+                                   # drove the decision (None for reaps —
+                                   # those are consequences, not decisions)
 
 
 class Autoscaler:
@@ -105,13 +108,13 @@ class Autoscaler:
         if overloaded and n_effective < cfg.max_replicas:
             self.pending_provisions.append(now + cfg.provision_delay)
             self._last_decision = now
-            out.append(ScaleEvent(now, SCALE_UP, -1))
+            out.append(ScaleEvent(now, SCALE_UP, -1, signal=sig))
         elif idle and len(active) > cfg.min_replicas:
             # drain the least-loaded active replica (cheapest to finish)
             victim = min(active, key=lambda r: (r.kv_demand(), -r.id))
             victim.drain()
             self._last_decision = now
-            out.append(ScaleEvent(now, SCALE_DOWN, victim.id))
+            out.append(ScaleEvent(now, SCALE_DOWN, victim.id, signal=sig))
 
         self.events.extend(out)
         return out

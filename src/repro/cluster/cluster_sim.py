@@ -158,10 +158,16 @@ class ClusterSimulator:
         self.autoscaler = (Autoscaler(self.cfg.autoscaler)
                            if self.cfg.autoscaler else None)
         self._rep_ids = itertools.count()
-        # lifecycle-event sink (repro.api): propagated to every replica
-        # backend, including ones the autoscaler provisions later. Set
-        # before the first replicas are built so they inherit it too.
-        self.event_sink = None
+        # observability (repro.obs): `self.obs` is the effective observer
+        # composed from an installed Observer and/or a legacy `event_sink`
+        # callable (deprecated; wrapped in EventSinkAdapter). Propagated —
+        # replica-scoped — to every replica backend, including ones the
+        # autoscaler provisions later; the cluster itself emits fleet
+        # events (route/admission/scale/shed/defer). Initialized before
+        # the first replicas are built so they inherit it too.
+        self._observer = None
+        self._event_sink = None
+        self.obs = None
         self.replicas: List[Replica] = [
             self._new_replica(0.0) for _ in range(self.cfg.n_replicas)
         ]
@@ -195,18 +201,63 @@ class ClusterSimulator:
         # the backend does, so the QoE router sees a speculative replica's
         # true expected-burst token rate. For stock factories sched.lat IS
         # the lat picked above, so nothing changes.
-        backend.event_sink = self.event_sink
+        backend.observer = self._scoped_obs(rid)
         return Replica(rid, backend, sched.lat, launched_at=launched_at)
 
+    # ------------------------------------------------------------ observers
+    def _scoped_obs(self, rid: int):
+        if self.obs is None:
+            return None
+        from repro.obs.observer import ScopedObserver
+        return ScopedObserver(self.obs, rid)
+
+    @property
+    def observer(self):
+        """Installed Observer (repro.obs); None = observability off. The
+        cluster propagates it replica-scoped to every backend (current and
+        future), so one observer sees the whole fleet with replica ids."""
+        return self._observer
+
+    @observer.setter
+    def observer(self, obs) -> None:
+        self._observer = obs
+        self._rewire_obs()
+
+    @property
+    def event_sink(self):
+        """Legacy lifecycle callable `sink(kind, req, t, k)` (deprecated;
+        kept as an EventSinkAdapter shim — prefer `observer`)."""
+        return self._event_sink
+
+    @event_sink.setter
+    def event_sink(self, sink) -> None:
+        self._event_sink = sink
+        self._rewire_obs()
+
+    def set_observer(self, obs) -> None:
+        self.observer = obs
+
+    def attach_observer(self, obs) -> None:
+        """Add `obs` alongside any already-installed observer."""
+        from repro.obs.observer import compose
+        self.observer = compose(self._observer, obs)
+
     def set_event_sink(self, sink) -> None:
-        """Install a lifecycle-event sink on the fleet: every replica
-        backend (current and future) reports emit/preempt/finish events
-        through it, and the cluster itself reports shed/defer decisions.
-        This is how repro.api.ServingClient observes a whole cluster
-        through the same event stream as a bare backend."""
+        """Install a lifecycle-event sink on the fleet (deprecated shim —
+        prefer `set_observer`/`attach_observer`): every replica backend
+        (current and future) reports emit/preempt/finish events through
+        it, and the cluster itself reports shed/defer decisions. This is
+        how repro.api.ServingClient used to observe a whole cluster; it
+        now rides the Observer protocol through an EventSinkAdapter."""
         self.event_sink = sink
+
+    def _rewire_obs(self) -> None:
+        from repro.obs.observer import EventSinkAdapter, compose
+        sink_obs = (EventSinkAdapter(self._event_sink)
+                    if self._event_sink is not None else None)
+        self.obs = compose(self._observer, sink_obs)
         for rep in self.replicas + self.retired:
-            rep.backend.event_sink = sink
+            rep.backend.observer = self._scoped_obs(rep.id)
 
     def _advance_all(self, t: float) -> None:
         for rep in self.replicas:
@@ -219,14 +270,23 @@ class ClusterSimulator:
             (gone if rep.drained else still).append(rep)
         for rep in gone:
             self.autoscaler.record_reap(t, rep)
+            if self.obs is not None:
+                self.obs.scale(t, "reap", rep.id)
         self.replicas, self.retired = still, self.retired + gone
 
     def _autoscale(self, t: float) -> None:
         if self.autoscaler is None:
             return
         for _ in range(self.autoscaler.take_ready_provisions(t)):
-            self.replicas.append(self._new_replica(t))
-        self.autoscaler.evaluate(t, self.replicas)
+            rep = self._new_replica(t)
+            self.replicas.append(rep)
+            if self.obs is not None:
+                self.obs.scale(t, "provision_ready", rep.id)
+        events = self.autoscaler.evaluate(t, self.replicas)
+        if self.obs is not None:
+            for ev in events:
+                self.obs.scale(ev.t, ev.action, ev.replica_id,
+                               signal=ev.signal)
         self._reap_drained(t)
         self.peak_replicas = max(self.peak_replicas, len(self.replicas))
 
@@ -236,6 +296,8 @@ class ClusterSimulator:
         end-of-trace cleanup so a second submit-then-drain round on the
         same cluster finalizes again (interactive client sessions)."""
         heapq.heappush(self._queue, (req.arrival, next(self._seq), req))
+        if self.obs is not None:
+            self.obs.submit(req, req.arrival)
         self._finalized = False
 
     @property
@@ -269,7 +331,13 @@ class ClusterSimulator:
                                          len(self.replicas))
                 routable = [rep]
         decision = self.router.route(req, routable, route_at)
+        obs = self.obs
+        if obs is not None:
+            obs.route(req, route_at, decision.replica.id, decision.gain,
+                      decision.scores)
         action = self.admission.decide(req, decision, route_at)
+        if obs is not None:
+            obs.admission(req, route_at, action, decision.gain)
         if action == ADMIT:
             decision.replica.submit(req)
             self.admitted.append(req)
@@ -279,12 +347,12 @@ class ClusterSimulator:
                 (route_at + self.admission.cfg.defer_delay,
                  next(self._seq), req),
             )
-            if self.event_sink is not None:
-                self.event_sink("defer", req, route_at, 0)
+            if obs is not None:
+                obs.defer(req, route_at)
         else:
             self.shed.append(req)
-            if self.event_sink is not None:
-                self.event_sink("shed", req, route_at, 0)
+            if obs is not None:
+                obs.shed(req, route_at)
 
     def step(self, until: Optional[float] = None) -> bool:
         """One fleet event: route the next queued arrival, or — once the

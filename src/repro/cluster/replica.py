@@ -43,6 +43,14 @@ class SteppableBackend(Protocol):
     def step(self, until: Optional[float] = None) -> bool: ...
     def result(self) -> SimResult: ...
 
+    # Observability (repro.obs): assignable effective-observer slot. Both
+    # shipped backends also expose `observer`/`event_sink` properties and
+    # `attach_observer`; the cluster layer only *assigns* `observer`, so a
+    # minimal third-party backend may accept it as a plain attribute and
+    # simply never call the hooks (observability degrades to silence, not
+    # to a crash).
+    observer: object
+
 
 class Replica:
     """One engine instance in the fleet."""

@@ -130,7 +130,10 @@ class JSQRouter(Router):
 
     def route(self, req, replicas, now):
         rep = min(replicas, key=lambda r: (len(r.committed()), r.id))
-        return RouteDecision(rep)
+        # scores = the queue depths the decision was taken on, so route
+        # trace events are explainable for every policy, not just "qoe".
+        return RouteDecision(
+            rep, scores={r.id: float(len(r.committed())) for r in replicas})
 
 
 REFERENCE_BATCH = 16

@@ -276,6 +276,20 @@ class BatchPricing:
     weights: np.ndarray      # contract/priority pricing weight per live req
     mean_ctx: float          # mean context length across live requests
 
+    def summary(self) -> dict:
+        """Compact JSON-able view of the iteration's pricing inputs — the
+        payload the scheduler attaches to its `schedule` observability
+        events (repro.obs), so a trace records *why* a knapsack decision
+        was taken without carrying full per-request arrays."""
+        return {
+            "q_wait_mean": float(self.q_wait.mean()) if self.q_wait.size
+            else 0.0,
+            "q_now_mean": float(self.q_now.mean()) if self.q_now.size
+            else 0.0,
+            "mean_ctx": float(self.mean_ctx),
+            "total_weight": float(self.weights.sum()),
+        }
+
 
 class QoEPricer:
     """The one QoE-pricing surface, bound to a scheduler.

@@ -69,6 +69,10 @@ class Scheduler:
         # re-pointing of self.lat / self.M (backend factories do both) is
         # seen by every consumer.
         self.pricer = QoEPricer(self)
+        # observability (repro.obs): wired by the owning backend's
+        # `_rewire_obs`; None = off. Decision events are emitted through
+        # `_record_decision` so the payload is only built when observed.
+        self.obs = None
         self.iteration = 0
         self.total_preemptions = 0
         self.total_requests = 0
@@ -95,6 +99,31 @@ class Scheduler:
 
     def record_preemptions(self, n: int) -> None:
         self.total_preemptions += n
+
+    def _record_decision(self, now: float, live: Sequence[Request],
+                         chosen: Sequence[Request],
+                         info: Optional[dict] = None) -> None:
+        """Emit one `schedule` observability event (no-op when
+        unobserved): which requests were chosen, which running requests
+        became victims, plus any policy-specific pricing payload."""
+        obs = self.obs
+        if obs is None:
+            return
+        chosen_ids = {id(r) for r in chosen}
+        victims = [r.rid for r in live
+                   if r.state == ReqState.RUNNING
+                   and id(r) not in chosen_ids]
+        payload = {
+            "policy": self.name,
+            "iteration": int(self.iteration),
+            "n_live": len(live),
+            "n_chosen": len(chosen),
+            "chosen": [r.rid for r in chosen],
+            "victims": victims,
+        }
+        if info:
+            payload.update(info)
+        obs.schedule(now, payload)
 
     def schedule(self, now: float, live: List[Request], fluid: FluidQoE
                  ) -> List[Request]:
@@ -153,6 +182,7 @@ class FCFSScheduler(Scheduler):
                 used += w
             else:
                 break
+        self._record_decision(now, live, keep)
         return keep
 
 
@@ -193,6 +223,9 @@ class RoundRobinScheduler(Scheduler):
             if used + w <= self.M:
                 keep.append(r)
                 used += w
+        self._record_decision(now, live, keep,
+                              {"rotated": bool(rotate)}
+                              if self.obs is not None else None)
         return keep
 
 
@@ -211,7 +244,11 @@ class AndesScheduler(Scheduler):
 
         # ---- Optimization #1: selective triggering -----------------------
         if not self._triggered(live, running, weights):
-            return self._admit_all(live, weights)
+            chosen = self._admit_all(live, weights)
+            self._record_decision(now, live, chosen,
+                                  {"triggered": False}
+                                  if self.obs is not None else None)
+            return chosen
 
         # ---- Optimization #2: batch size pruning --------------------------
         b_min, b_max = self._batch_bounds(live, weights)
@@ -234,17 +271,31 @@ class AndesScheduler(Scheduler):
         gains_grid = self.pricer.serve_gains_grid(
             now, fluid, bp, candidates, gain_fn
         ) + self.cfg.stickiness * is_running
-        best = (-np.inf, None)
+        best = (-np.inf, None, None, 0)
         for gains, b in zip(gains_grid, candidates):
             sel, value = self._solve(gains, weights, int(b))
             if value > best[0]:
-                best = (value, sel)
+                best = (value, sel, gains, int(b))
 
         sel = best[1]
         chosen = [live[i] for i in np.nonzero(sel)[0]]
 
         # ---- Optimization #4: preemption cap -------------------------------
         chosen = self._apply_preemption_cap(chosen, running, weights, live)
+        if self.obs is not None:
+            # pricing inputs behind the decision (QoEPricer gains, the
+            # candidate grid, the winning knapsack) — trace-only payload
+            info = {
+                "triggered": True,
+                "b_candidates": [int(b) for b in candidates],
+                "b_chosen": best[3],
+                "knapsack_value": float(best[0]),
+                **bp.summary(),
+            }
+            if len(live) <= 64:       # full gain vector only when small
+                info["gains"] = {str(r.rid): float(g)
+                                 for r, g in zip(live, best[2])}
+            self._record_decision(now, live, chosen, info)
         return chosen
 
     # ------------------------------------------------------------------ parts

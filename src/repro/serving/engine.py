@@ -205,7 +205,16 @@ class BucketedPrefill:
             b *= 2
         self.buckets.append(min(b, cache_seq))
         self.shapes_seen = set()        # (rows, len_bucket) jit signatures
+        self.on_compile = None          # optional fn(key) on new signature
         self._jit = jax.jit(self._call)
+
+    def note_shape(self, key) -> None:
+        """Record a jit signature entering the compile cache (fires the
+        observability callback exactly once per new shape)."""
+        if key not in self.shapes_seen:
+            self.shapes_seen.add(key)
+            if self.on_compile is not None:
+                self.on_compile(key)
 
     def bucket(self, n: int) -> int:
         for b in self.buckets:
@@ -240,8 +249,9 @@ class BucketedPrefill:
         implementation shared by the engine's admission path and the
         draft proposer's cache build. Returns (cache', first_ids (N,)
         int32 aligned with the inputs — zeros when need_first=False,
-        which also skips the device→host fetch — and the number of
-        device→host sync rounds performed)."""
+        which also skips the device→host fetch — the number of
+        device→host sync rounds performed, and the number of bucket
+        groups dispatched)."""
         groups: dict = {}
         for i, t in enumerate(toks_list):
             groups.setdefault(self.bucket(len(t)), []).append(i)
@@ -263,7 +273,7 @@ class BucketedPrefill:
                 syncs += 1
                 for j, i in enumerate(idxs):
                     first_out[i] = first[j]
-        return cache, first_out, syncs
+        return cache, first_out, syncs, len(groups)
 
     def run(self, params, toks_list, frames_list=None):
         """Prefill one same-bucket group. toks_list: per-request token
@@ -284,7 +294,7 @@ class BucketedPrefill:
                 f = frames_list[i] if frames_list else None
                 if f is not None:
                     frames[i] = f
-        self.shapes_seen.add((rows, seq))
+        self.note_shape((rows, seq))
         first, cache = self._jit(
             params, jnp.asarray(tokens), jnp.asarray(lengths),
             jnp.asarray(frames) if self.enc_seq else None,
@@ -349,10 +359,14 @@ class ServingEngine:
         self.clock = clock
         self.eos_id = eos_id
         self.hotpath = hotpath if hotpath is not None else HotpathConfig()
-        # optional lifecycle-event sink (repro.api): called as
-        # sink(kind, request, t, k), kind in {"emit","preempt","finish"};
-        # survives reset() so run() keeps reporting to an installed client
-        self.event_sink = None
+        # observability (repro.obs): `self.obs` is the effective observer
+        # (None = off; every instrumentation point guards on that) composed
+        # from an installed Observer and/or a legacy `event_sink` callable
+        # (deprecated; wrapped in EventSinkAdapter). Survives reset() so
+        # run() keeps reporting to installed consumers.
+        self._observer = None
+        self._event_sink = None
+        self.obs = None
         self.max_seq = max_seq
         self._num_slots = num_slots
         self._capacity_tokens = capacity_tokens
@@ -411,11 +425,17 @@ class ServingEngine:
     # ------------------------------------------------------------------ state
     def reset(self) -> None:
         """Clear all serving state (the device cache pytree is reused; live
-        slots are always re-written at prefill/swap-in time)."""
-        self.kv = KVSlotManager(self._num_slots, self.max_seq,
-                                self._capacity_tokens,
-                                burst_reserve=(self.spec_k + 1
-                                               if self.spec_k else 0))
+        slots are always re-written at prefill/swap-in time). The
+        KVSlotManager object is reused too — cleared in place — so gauges
+        bound to `engine.kv` (repro.obs.metrics.register_backend_gauges)
+        stay valid across run()/reset() cycles."""
+        if getattr(self, "kv", None) is None:
+            self.kv = KVSlotManager(self._num_slots, self.max_seq,
+                                    self._capacity_tokens,
+                                    burst_reserve=(self.spec_k + 1
+                                                   if self.spec_k else 0))
+        else:
+            self.kv.reset()
         self.fluid = FluidQoE()
         self.spec_steps = 0          # verify iterations executed
         self.spec_proposed = 0       # draft tokens proposed per verify (k each)
@@ -434,9 +454,68 @@ class ServingEngine:
         self.seen: List[Request] = []        # submit order
         self.stuck = False                   # deadlocked (cleared by submit)
         self.host_syncs = 0                  # device→host transfer rounds
+        self.dispatches = 0                  # device computation launches
         self.multi_step_blocks = 0           # fused multi-iteration dispatches
         self.multi_step_iters = 0            # iterations committed by them
         self._wall0 = time.monotonic()
+
+    # ------------------------------------------------------------ observers
+    @property
+    def observer(self):
+        """Installed Observer (repro.obs); None = observability off."""
+        return self._observer
+
+    @observer.setter
+    def observer(self, obs) -> None:
+        self._observer = obs
+        self._rewire_obs()
+
+    @property
+    def event_sink(self):
+        """Legacy lifecycle callable `sink(kind, req, t, k)` (deprecated;
+        kept as an EventSinkAdapter shim — prefer `observer`)."""
+        return self._event_sink
+
+    @event_sink.setter
+    def event_sink(self, sink) -> None:
+        self._event_sink = sink
+        self._rewire_obs()
+
+    def set_observer(self, obs) -> None:
+        self.observer = obs
+
+    def attach_observer(self, obs) -> None:
+        """Add `obs` alongside any already-installed observer."""
+        from repro.obs.observer import compose
+        self.observer = compose(self._observer, obs)
+
+    def _rewire_obs(self) -> None:
+        from repro.obs.observer import EventSinkAdapter, compose
+        sink_obs = (EventSinkAdapter(self._event_sink)
+                    if self._event_sink is not None else None)
+        self.obs = compose(self._observer, sink_obs)
+        self.sched.obs = self.obs
+        obs = self.obs
+        cb = ((lambda key: obs.jit_compile(self.now, key))
+              if obs is not None else None)
+        self._prefill.on_compile = cb
+        if self.spec_k and self.draft.bucketed is not None:
+            self.draft.bucketed.on_compile = cb
+
+    def _sync(self, n: int = 1) -> None:
+        """Count host<->device synchronization rounds."""
+        if n:
+            self.host_syncs += n
+            if self.obs is not None:
+                self.obs.sync(self.now, n)
+
+    def _dispatch(self, kind: str, n: int = 1) -> None:
+        """Count device computation dispatches (model-forward launches;
+        cheap metadata ops like `with_lengths` are not counted)."""
+        if n:
+            self.dispatches += n
+            if self.obs is not None:
+                self.obs.dispatch(self.now, kind, n)
 
     def submit(self, req: Request) -> None:
         """Enqueue an arrival. Stable insert keeps equal-arrival order
@@ -447,6 +526,8 @@ class ServingEngine:
                                 key=lambda r: r.arrival)
         self._pending.insert(i, req)
         self.seen.append(req)
+        if self.obs is not None:
+            self.obs.submit(req, req.arrival)
         # a new arrival may change the scheduler's choice even if the
         # current live set deadlocked — try again
         self.stuck = False
@@ -468,6 +549,7 @@ class ServingEngine:
             shapes |= self.draft.bucketed.shapes_seen
         return {
             "host_syncs": self.host_syncs,
+            "dispatches": self.dispatches,
             "prefill_shapes": sorted(shapes),
             "prefill_compiles": len(shapes),
             "prefill_bucket_grid": list(self._prefill.buckets),
@@ -517,6 +599,8 @@ class ServingEngine:
         slot = self.kv.allocate(r)
         self.slot_req[slot] = r
         self._tick(self.lat.prefill_latency(len(toks)))
+        if self.obs is not None:
+            self.obs.prefill(r, self.now, len(toks))
         emit_t = None
         if r.generated == 0:
             emit_t = self.now
@@ -537,26 +621,31 @@ class ServingEngine:
         if not staged:
             return
         slots = [rec.slot for rec in staged]
-        self.cache, first, syncs = self._prefill.prefill_into(
+        self.cache, first, syncs, n_groups = self._prefill.prefill_into(
             self.params, self.cache, slots,
             [rec.toks for rec in staged],
             [rec.frames for rec in staged],
         )
-        self.host_syncs += syncs
+        self._sync(syncs)
+        self._dispatch("prefill", n_groups)
+        self._dispatch("write", n_groups)
         if self.spec_k:
             # draft invariant: committed[:-1] — the full staged context
             # for fresh prefills (their first token was committed at
             # stage time), minus the trailing token on recompute resume
-            self.draft.prefill_batch(
+            n_draft = self.draft.prefill_batch(
                 slots,
                 [rec.toks if rec.emit_t is not None else rec.toks[:-1]
                  for rec in staged],
             )
+            self._dispatch("draft_prefill", n_draft)
+            self._dispatch("write", n_draft)
+        obs = self.obs
         for i, rec in enumerate(staged):
             if rec.emit_t is not None:
                 rec.req.output_tokens.append(int(first[i]))
-                if self.event_sink is not None:
-                    self.event_sink("emit", rec.req, rec.emit_t, 1)
+                if obs is not None:
+                    obs.emit(rec.req, rec.emit_t, 1)
 
     def _prefill_request(self, r: Request) -> None:
         """Run the prompt (plus any generated prefix on recompute) —
@@ -593,9 +682,11 @@ class ServingEngine:
                                else jnp.zeros((1, enc_seq, self.model.cfg.d_model),
                                               jnp.float32))
         logits, one = self.model.prefill(self.params, batch, one)
-        self._prefill.shapes_seen.add((1, len(toks)))   # exact-length compile
+        self._prefill.note_shape((1, len(toks)))        # exact-length compile
+        self._dispatch("prefill")
         slot = self.kv.allocate(r)
         self.cache = _write_slot(self.cache, one, slot)
+        self._dispatch("write")
         self.slot_req[slot] = r
         if self.spec_k:
             # the draft holds committed[:-1] (speculative.py invariant): on a
@@ -603,10 +694,14 @@ class ServingEngine:
             # is already that prefix; on recompute-resume drop the last
             # committed token — it is the next proposal round's input.
             self.draft.prefill(slot, toks if r.generated == 0 else toks[:-1])
+            self._dispatch("draft_prefill")
+            self._dispatch("write")
         self._tick(self.lat.prefill_latency(len(toks)))
+        if self.obs is not None:
+            self.obs.prefill(r, self.now, len(toks))
         if r.generated == 0:
             tok = int(jnp.argmax(logits[0]))
-            self.host_syncs += 1
+            self._sync()
             self._emit(r, tok)
 
     # ---------------------------------------------------------------- emit
@@ -617,8 +712,8 @@ class ServingEngine:
         self.fluid.emit(r.fluid_idx, self.now, 1)
         self.kv.grow(r)
         self.total_tokens += 1
-        if self.event_sink is not None:
-            self.event_sink("emit", r, self.now, 1)
+        if self.obs is not None:
+            self.obs.emit(r, self.now, 1)
         done = (r.generated >= r.output_len
                 or (self.eos_id >= 0 and tok == self.eos_id))
         if done:
@@ -645,8 +740,8 @@ class ServingEngine:
             self.fluid.emit(r.fluid_idx, self.now, len(emitted))
             self.kv.grow(r, len(emitted))
             self.total_tokens += len(emitted)
-            if self.event_sink is not None:
-                self.event_sink("emit", r, self.now, len(emitted))
+            if self.obs is not None:
+                self.obs.emit(r, self.now, len(emitted))
         done = (r.generated >= r.output_len
                 or (self.eos_id >= 0 and emitted and
                     emitted[-1] == self.eos_id))
@@ -661,8 +756,8 @@ class ServingEngine:
         slot = r.engine_slot
         self.kv.release(r)
         self.slot_req.pop(slot, None)
-        if self.event_sink is not None:
-            self.event_sink("finish", r, self.now, 0)
+        if self.obs is not None:
+            self.obs.finish(r, self.now)
 
     # ------------------------------------------------------------ preempt
     def _preempt(self, r: Request) -> None:
@@ -670,8 +765,9 @@ class ServingEngine:
         self.preemptions += 1
         slot = r.engine_slot
         if self.preemption_mode == "swap":
+            self._dispatch("read")
             host_slice = jax.device_get(_read_slot(self.cache, slot))
-            self.host_syncs += 1
+            self._sync()
             draft_slice = self.draft.park(slot) if self.spec_k else None
             self.kv.swap_out(r, host_slice, draft_slice)
             r.state = ReqState.SWAPPED
@@ -682,8 +778,8 @@ class ServingEngine:
             r.prefilled = False
         self.slot_req.pop(slot, None)
         self.sched.record_preemptions(1)
-        if self.event_sink is not None:
-            self.event_sink("preempt", r, self.now, 0)
+        if self.obs is not None:
+            self.obs.preempt(r, self.now, self.preemption_mode)
 
     def _swap_in(self, r: Request) -> None:
         host_slice = self.kv.swap_in(r)
@@ -692,11 +788,15 @@ class ServingEngine:
         self.cache = _write_slot(
             self.cache, jax.tree.map(jnp.asarray, host_slice), slot
         )
+        self._dispatch("write")
         if draft_slice is not None:
             self.draft.restore(slot, draft_slice)
+            self._dispatch("write")
         self.slot_req[slot] = r
         r.state = ReqState.RUNNING
         self._tick(self.lat.swap_latency(r.context_len))
+        if self.obs is not None:
+            self.obs.swap_in(r, self.now)
 
     # ------------------------------------------------------- speculative
     def _make_spec_fused(self):
@@ -740,24 +840,28 @@ class ServingEngine:
                 self._spec_fused(self.params, self.draft.params,
                                  jnp.asarray(tokens), self.cache,
                                  self.draft.cache)
+            self._dispatch("spec_fused")
             self._tick(self.lat.iter_latency(len(active), total_ctx))
             window, greedy, accepted = jax.device_get(
                 (window, greedy, accepted)
             )
-            self.host_syncs += 1
+            self._sync()
         else:
             proposals = self.draft.propose(tokens, draft_lengths, k)
-            self.host_syncs += 1
+            self._dispatch("propose")
+            self._sync()
             window = np.concatenate([tokens[:, None], proposals], axis=1)
             logits, self.cache = self._verify(
                 self.params, jnp.asarray(window), self.cache
             )
+            self._dispatch("verify")
             # one step's cost: k+1 draft decodes + the fused verify (the
             # SpeculativeLatencyModel's iter_latency — same call as baseline)
             self._tick(self.lat.iter_latency(len(active), total_ctx))
             greedy = np.asarray(jnp.argmax(logits, axis=-1))  # (slots, k+1)
-            self.host_syncs += 1
+            self._sync()
             accepted = None
+        step_accepted = 0
         for s, r in list(active.items()):
             d, g = window[s, 1:], greedy[s]
             if accepted is not None:
@@ -774,9 +878,12 @@ class ServingEngine:
             self.spec_steps += 1
             self.spec_proposed += k
             self.spec_accepted += a
+            step_accepted += a
             if hasattr(self.lat, "observe_acceptance"):
                 self.lat.observe_acceptance(a)
             self._emit_burst(r, toks)
+        if self.obs is not None:
+            self.obs.spec(self.now, k * len(active), step_accepted)
 
     def spec_stats(self) -> dict:
         """Acceptance-side counters (speculative engines only)."""
@@ -849,8 +956,9 @@ class ServingEngine:
         ids, self.cache = self._decode_multi(
             self.params, jnp.asarray(tokens), self.cache, j=j
         )
+        self._dispatch("decode_multi")
         ids = np.asarray(ids)                   # ONE sync for j iterations
-        self.host_syncs += 1
+        self._sync()
         self.multi_step_blocks += 1
         items = list(active.items())
         b = len(items)
@@ -870,12 +978,15 @@ class ServingEngine:
                             # drop the overshoot (length-gate rollback)
         self.multi_step_iters += committed
         self.sched.skip_iterations(committed - 1)
+        if self.obs is not None:
+            self.obs.multi_step(self.now, j, committed)
         return committed
 
     # ----------------------------------------------------------- main loop
     def _admit_arrivals(self) -> None:
         pend = self._pending
         pos = self._pending_pos
+        obs = self.obs
         while pos < len(pend) and pend[pos].arrival <= self.now:
             r = pend[pos]
             pos += 1
@@ -883,6 +994,8 @@ class ServingEngine:
             r.state = ReqState.WAITING
             self.live.append(r)
             self.sched.on_request_arrival(r)
+            if obs is not None:
+                obs.admit(r, self.now)
         self._pending_pos = pos
         # amortized compaction: drop the consumed prefix once it dominates
         if pos and pos * 2 >= len(pend):
@@ -965,18 +1078,20 @@ class ServingEngine:
                     ids, self.cache = self._decode_tok(
                         self.params, jnp.asarray(tokens), self.cache
                     )
+                    self._dispatch("decode")
                     self._tick(self.lat.iter_latency(len(active), total_ctx))
                     nxt = np.asarray(ids)
-                    self.host_syncs += 1
+                    self._sync()
                     for s, r in list(active.items()):
                         self._emit(r, int(nxt[s]))
                 else:
                     logits, self.cache = self._decode(
                         self.params, jnp.asarray(tokens), self.cache
                     )
+                    self._dispatch("decode")
                     self._tick(self.lat.iter_latency(len(active), total_ctx))
                     nxt = np.asarray(jnp.argmax(logits, axis=-1))
-                    self.host_syncs += 1
+                    self._sync()
                     for s, r in list(active.items()):
                         self._emit(r, int(nxt[s]))
         else:

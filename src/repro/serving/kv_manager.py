@@ -36,13 +36,39 @@ class KVSlotManager:
         self.max_seq = max_seq
         self.capacity_tokens = capacity_tokens or num_slots * max_seq
         self.burst_reserve = burst_reserve
-        self.free_slots: List[int] = list(range(num_slots))
+        self.reset()
+
+    def reset(self) -> None:
+        """Clear all occupancy state in place (including the peak
+        high-water mark and swap accounting, which a fresh run must not
+        inherit). In-place so external references — observability gauges
+        bound to an engine's `kv` — stay valid across `engine.reset()`."""
+        self.free_slots: List[int] = list(range(self.num_slots))
         self.slot_of: Dict[int, int] = {}          # rid -> slot
         self.tokens_used = 0
         self.peak_tokens_used = 0                  # high-water mark
         self.host_store: Dict[int, dict] = {}      # rid -> host pytree slice
         self.draft_store: Dict[int, dict] = {}     # rid -> parked draft slice
         self.swap_bytes_total = 0
+
+    @property
+    def slots_in_use(self) -> int:
+        """Batch slots currently holding a resident request."""
+        return self.num_slots - len(self.free_slots)
+
+    def occupancy(self) -> dict:
+        """Point-in-time occupancy snapshot (per-step gauge source)."""
+        return {
+            "tokens_used": self.tokens_used,
+            "peak_tokens_used": self.peak_tokens_used,
+            "capacity_tokens": self.capacity_tokens,
+            "utilization": self.utilization,
+            "peak_utilization": self.peak_utilization,
+            "slots_in_use": self.slots_in_use,
+            "num_slots": self.num_slots,
+            "swapped_requests": len(self.host_store),
+            "swap_bytes_total": self.swap_bytes_total,
+        }
 
     # ---- allocation ---------------------------------------------------------
     def can_allocate(self, req: Request) -> bool:

@@ -100,12 +100,51 @@ class ServingSimulator:
         self.sched = scheduler
         self.lat = lat
         self.cfg = sim_cfg
-        # optional lifecycle-event sink (repro.api): called as
-        # sink(kind, request, t, k) with kind in {"emit","preempt",
-        # "finish"}; survives reset() so run() keeps reporting to an
-        # installed client
-        self.event_sink = None
+        # observability (repro.obs): `self.obs` is the effective observer
+        # (None = off) composed from an installed Observer and/or a legacy
+        # `event_sink` callable (deprecated; wrapped in EventSinkAdapter).
+        # Survives reset() so run() keeps reporting to installed consumers.
+        self._observer = None
+        self._event_sink = None
+        self.obs = None
         self.reset()
+
+    # ------------------------------------------------------------ observers
+    @property
+    def observer(self):
+        """Installed Observer (repro.obs); None = observability off."""
+        return self._observer
+
+    @observer.setter
+    def observer(self, obs) -> None:
+        self._observer = obs
+        self._rewire_obs()
+
+    @property
+    def event_sink(self):
+        """Legacy lifecycle callable `sink(kind, req, t, k)` (deprecated;
+        kept as an EventSinkAdapter shim — prefer `observer`)."""
+        return self._event_sink
+
+    @event_sink.setter
+    def event_sink(self, sink) -> None:
+        self._event_sink = sink
+        self._rewire_obs()
+
+    def set_observer(self, obs) -> None:
+        self.observer = obs
+
+    def attach_observer(self, obs) -> None:
+        """Add `obs` alongside any already-installed observer."""
+        from repro.obs.observer import compose
+        self.observer = compose(self._observer, obs)
+
+    def _rewire_obs(self) -> None:
+        from repro.obs.observer import EventSinkAdapter, compose
+        sink_obs = (EventSinkAdapter(self._event_sink)
+                    if self._event_sink is not None else None)
+        self.obs = compose(self._observer, sink_obs)
+        self.sched.obs = self.obs
 
     # ------------------------------------------------------------------ state
     def reset(self) -> None:
@@ -132,6 +171,8 @@ class ServingSimulator:
                                 key=lambda r: r.arrival)
         self._pending.insert(i, req)
         self.seen.append(req)
+        if self.obs is not None:
+            self.obs.submit(req, req.arrival)
         # a new arrival may be schedulable even if the current live set
         # deadlocked (e.g. an oversized prompt) — try again
         self.stuck = False
@@ -150,6 +191,7 @@ class ServingSimulator:
     def _admit_arrivals(self, t: float) -> None:
         pend = self._pending
         pos = self._pending_pos
+        obs = self.obs
         while pos < len(pend) and pend[pos].arrival <= t:
             r = pend[pos]
             pos += 1
@@ -157,6 +199,8 @@ class ServingSimulator:
             r.state = ReqState.WAITING
             self.live.append(r)
             self.sched.on_request_arrival(r)
+            if obs is not None:
+                obs.admit(r, t)
         self._pending_pos = pos
         # amortized compaction: drop the consumed prefix once it dominates
         if pos and pos * 2 >= len(pend):
@@ -195,24 +239,26 @@ class ServingSimulator:
         target_set = set(id(r) for r in target)
 
         # ---- preemptions ------------------------------------------------
-        sink = self.event_sink
+        obs = self.obs
         iter_extra = 0.0
         newly_preempted = [r for r in running if id(r) not in target_set]
         for r in newly_preempted:
             r.preemptions += 1
             self.preemptions += 1
-            if sink is not None:
-                sink("preempt", r, now, 0)
             ctx = r.context_len
             if (self.cfg.preemption_mode == "swap"
                     and self.host_kv_used + ctx <= self.cfg.host_kv_capacity_tokens):
                 r.state = ReqState.SWAPPED
                 self.host_kv_used += ctx
                 iter_extra += self.lat.swap_latency(ctx)
+                mode = "swap"
             else:
                 # paper §4.2: fall back to recomputation when host RAM full
                 r.state = ReqState.WAITING
                 r.prefilled = False
+                mode = "recompute"
+            if obs is not None:
+                obs.preempt(r, now, mode)
         self.sched.record_preemptions(len(newly_preempted))
 
         # ---- admissions -------------------------------------------------
@@ -222,11 +268,15 @@ class ServingSimulator:
                 self.host_kv_used -= r.context_len
                 iter_extra += self.lat.swap_latency(r.context_len)
                 r.state = ReqState.RUNNING
+                if obs is not None:
+                    obs.swap_in(r, now)
             elif r.state == ReqState.WAITING:
                 # prefill (recompute includes generated prefix)
                 iter_extra += self.lat.prefill_latency(r.context_len)
                 r.state = ReqState.RUNNING
                 r.prefilled = True
+                if obs is not None:
+                    obs.prefill(r, now, r.context_len)
                 if r.generated == 0:
                     first_emits.append(r)
 
@@ -240,8 +290,8 @@ class ServingSimulator:
             fluid.emit(r.fluid_idx, prefill_done, 1)
             r.generated = 1
             self.total_tokens += 1
-            if sink is not None:
-                sink("emit", r, prefill_done, 1)
+            if obs is not None:
+                obs.emit(r, prefill_done, 1)
 
         # ---- decode iteration -------------------------------------------
         decoders = [r for r in running if r.generated < r.output_len]
@@ -256,8 +306,8 @@ class ServingSimulator:
             r.generated += 1
             self.total_tokens += 1
             emit_idx.append(r.fluid_idx)
-            if sink is not None:
-                sink("emit", r, now, 1)
+            if obs is not None:
+                obs.emit(r, now, 1)
         if emit_idx:
             fluid.emit(np.array(emit_idx), now, 1)
 
@@ -267,8 +317,8 @@ class ServingSimulator:
                 r.state = ReqState.FINISHED
                 r.finish_time = now
                 self.sched.on_request_finish(r)
-                if sink is not None:
-                    sink("finish", r, now, 0)
+                if obs is not None:
+                    obs.finish(r, now)
         self.live = [r for r in self.live if r.is_live]
         self.now = now
         self._admit_arrivals(now)

@@ -104,18 +104,20 @@ class DraftProposer:
         )
         self.cache = _write_slot(self.cache, one, slot)
 
-    def prefill_batch(self, slots, toks_list) -> None:
+    def prefill_batch(self, slots, toks_list) -> int:
         """Bucketed multi-row draft prefill — the same grouped
         `BucketedPrefill.prefill_into` flush the engine's admission path
         uses (one padded call + one fused scatter per bucket group; each
         row bit-identical to a batch-1 prefill of the same request, so the
         slot-parallel propose scans see exactly the state the sequential
         path would have built). The draft never needs first-token ids, so
-        the flush skips the device→host fetch entirely."""
-        self.cache, _, _ = self.bucketed.prefill_into(
+        the flush skips the device→host fetch entirely. Returns the number
+        of bucket groups dispatched (the engine's dispatch accounting)."""
+        self.cache, _, _, n_groups = self.bucketed.prefill_into(
             self.params, self.cache, list(slots), list(toks_list),
             need_first=False,
         )
+        return n_groups
 
     def park(self, slot: int) -> dict:
         """Fetch a slot's draft slice to host (preemption swap-out)."""

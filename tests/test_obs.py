@@ -1,0 +1,512 @@
+"""Observability layer (repro.obs): differential + reconciliation suite.
+
+The layer's contract has two halves, both pinned here:
+
+1. **Zero behavioral footprint.** Attaching any observer stack (trace +
+   metrics + profiling) to any backend — discrete-event simulator, real-
+   model engine, speculative engine, 1-replica cluster — produces output
+   BIT-FOR-BIT identical to the uninstrumented run: token ids, emission
+   timestamps, preemption counts, final QoE. Observation never perturbs.
+
+2. **Faithful record.** The trace is complete enough to *recompute* the
+   QoE story from scratch: `qoe_from_trace` (pure function of recorded
+   events) must equal every engine-reported `Request.final_qoe()`
+   exactly, the metrics registry must agree with the engine's private
+   hot-path counters, and every export (JSONL, Chrome-trace/Perfetto,
+   Prometheus text, JSON) must round-trip losslessly.
+
+Plus the plumbing: PR 4's legacy `event_sink` callable keeps working
+through EventSinkAdapter and composes with observers; the cluster stamps
+every event with its replica id via ScopedObserver; scheduler decisions
+carry their pricing payloads (gains, victim sets); autoscale events carry
+the attainment signal that drove them.
+"""
+import copy
+import json
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (
+    A100_4X,
+    LatencyModel,
+    QoESpec,
+    SchedulerConfig,
+    make_scheduler,
+)
+from repro.core.request import Request
+from repro.cluster import (
+    AutoscalerConfig,
+    ClusterConfig,
+    ClusterSimulator,
+)
+from repro.obs import (
+    EventSinkAdapter,
+    MetricsObserver,
+    MetricsRegistry,
+    MultiObserver,
+    Observer,
+    ProfilingObserver,
+    ScopedObserver,
+    TraceRecorder,
+    compose,
+    parse_prometheus,
+    qoe_from_trace,
+    register_backend_gauges,
+)
+from repro.obs.metrics import registry_samples_dict
+from repro.serving.simulator import ServingSimulator, SimConfig
+from repro.workload import make_workload
+
+CFG = get_config("opt-66b")
+LAT = LatencyModel(CFG, A100_4X)
+M = 65_000
+
+
+def make_sim(scheduler="andes", kv=M):
+    sched = make_scheduler(scheduler, kv, LAT, SchedulerConfig())
+    return ServingSimulator(sched, LAT, SimConfig(kv_capacity_tokens=kv))
+
+
+def full_stack(registry=None, **trace_kw):
+    """The complete observer stack: trace + metrics + profiling."""
+    reg = registry if registry is not None else MetricsRegistry()
+    tr = TraceRecorder(**trace_kw)
+    return tr, reg, compose(tr, MetricsObserver(reg), ProfilingObserver(reg))
+
+
+def fingerprint(reqs):
+    """Everything the zero-footprint contract promises, per request."""
+    return [(r.rid, tuple(r.output_tokens), tuple(r.emit_times),
+             r.preemptions, r.final_qoe())
+            for r in sorted(reqs, key=lambda r: r.rid)]
+
+
+def assert_trace_reconciles(events, reqs):
+    """QoE recomputed purely from the trace == engine-reported, exactly."""
+    traced = qoe_from_trace(events)
+    for r in reqs:
+        assert traced.get(r.rid, 0.0) == r.final_qoe(), r.rid
+
+
+# ---------------------------------------------------------------------------
+# Zero footprint: instrumented == uninstrumented, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheduler", ["andes", "fcfs"])
+def test_simulator_instrumented_bit_identical(scheduler):
+    # tight KV so preemption/swap-in events are exercised too
+    wl = make_workload(80, 8.0, seed=3, arrival="gamma", cv=3.0)
+    base = make_sim(scheduler, kv=12_000).run(copy.deepcopy(wl))
+
+    sim = make_sim(scheduler, kv=12_000)
+    trace, reg, stack = full_stack()
+    sim.observer = stack
+    inst = sim.run(copy.deepcopy(wl))
+
+    assert fingerprint(base.requests) == fingerprint(inst.requests)
+    if scheduler == "andes":
+        assert any(r.preemptions > 0 for r in inst.requests)
+    assert_trace_reconciles(trace.events, inst.requests)
+    # metrics agree with the result snapshot
+    n = len(inst.requests)
+    assert reg.value("requests_finished_total") == n
+    assert reg.value("tokens_emitted_total") == sum(
+        r.generated for r in inst.requests)
+    total_preempts = sum(v for _, _, v
+                         in reg.get("preemptions_total").samples())
+    assert total_preempts == sum(r.preemptions for r in inst.requests)
+    assert reg.get("ttft_seconds").count() == n
+    assert reg.value("live_requests") == 0
+
+
+def test_one_replica_cluster_instrumented_bit_identical():
+    wl = make_workload(100, 4.0, seed=13, arrival="gamma", cv=3.0)
+    base = ClusterSimulator(
+        LAT, ClusterConfig(n_replicas=1, kv_capacity_tokens=M)
+    ).run(copy.deepcopy(wl))
+
+    cs = ClusterSimulator(
+        LAT, ClusterConfig(n_replicas=1, kv_capacity_tokens=M))
+    trace, reg, stack = full_stack()
+    cs.observer = stack
+    inst = cs.run(copy.deepcopy(wl))
+
+    assert fingerprint(base.admitted) == fingerprint(inst.admitted)
+    assert_trace_reconciles(trace.events, inst.admitted)
+    # every request-lifecycle event is stamped with the serving replica
+    for ev in trace.events:
+        if ev.kind in ("emit", "prefill", "finish"):
+            assert ev.replica == 0
+    # fleet-level routing/admission events exist for every request
+    assert sum(e.kind == "route" for e in trace.events) == len(wl)
+    assert sum(e.kind == "admission" for e in trace.events) == len(wl)
+
+
+# ---------------------------------------------------------------------------
+# Real-model engine (incl. speculative): bit-for-bit + counter agreement
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.models import Model
+
+    cfg = get_smoke_config("llama3-8b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _engine_workload(cfg, n=8, seed=5):
+    rng = np.random.default_rng(seed)
+    wl = []
+    for i in range(n):
+        plen = int(rng.integers(8, 24))
+        wl.append(Request(
+            rid=i, arrival=i * 0.02, prompt_len=plen,
+            output_len=int(rng.integers(8, 16)),
+            spec=QoESpec(ttft=1.0, tds=4.8),
+            prompt_tokens=rng.integers(0, cfg.vocab_size, plen),
+        ))
+    return wl
+
+
+def _build_engine(cfg, model, params, spec_k=0):
+    from repro.core import SpeculativeLatencyModel, TPU_V5E
+    from repro.serving import ServingEngine
+
+    if spec_k:
+        lat = SpeculativeLatencyModel(cfg, TPU_V5E, cfg, k=spec_k)
+        extra = dict(draft_model=model, draft_params=params, spec_k=spec_k)
+    else:
+        lat = LatencyModel(cfg, TPU_V5E)
+        extra = {}
+    return ServingEngine(
+        model, params, make_scheduler("andes", 160, lat), lat,
+        num_slots=3, max_seq=64, capacity_tokens=160, **extra)
+
+
+@pytest.mark.parametrize("spec_k", [0, 2])
+def test_engine_instrumented_bit_identical(engine_setup, spec_k):
+    cfg, model, params = engine_setup
+    wl = _engine_workload(cfg)
+
+    base_wl = [r.clone() for r in wl]
+    _build_engine(cfg, model, params, spec_k).run(base_wl)
+
+    eng = _build_engine(cfg, model, params, spec_k)
+    trace, reg, stack = full_stack()
+    eng.observer = stack
+    register_backend_gauges(reg, eng)
+    inst_wl = [r.clone() for r in wl]
+    eng.run(inst_wl)
+
+    assert fingerprint(base_wl) == fingerprint(inst_wl)
+    assert_trace_reconciles(trace.events, inst_wl)
+
+    # registry counters == the engine's private hot-path counters
+    hs = eng.hotpath_stats()
+    assert reg.value("engine_host_syncs_total") == hs["host_syncs"]
+    dispatches = sum(v for _, _, v
+                     in reg.get("engine_dispatches_total").samples())
+    assert dispatches == hs["dispatches"]
+    # jit_compiles counts compile EVENTS (one per jit cache x shape: the
+    # speculative engine's draft cache recompiles the same signatures);
+    # hotpath_stats reports unique shape signatures across the caches
+    n_caches = 2 if spec_k else 1
+    assert reg.value("engine_jit_compiles_total") == \
+        n_caches * hs["prefill_compiles"]
+    assert reg.value("engine_multi_step_blocks_total") == \
+        hs["multi_step_blocks"]
+    if spec_k:
+        proposed = reg.value("engine_spec_proposed_total")
+        accepted = reg.value("engine_spec_accepted_total")
+        assert proposed > 0 and 0 < accepted <= proposed
+        assert reg.value("spec_acceptance_rate") == accepted / proposed
+
+    # KV gauges read live state and survive reset() (same manager object)
+    assert reg.value("kv_tokens_peak") == eng.kv.peak_tokens_used > 0
+    kv_obj = eng.kv
+    eng.reset()
+    assert eng.kv is kv_obj
+    assert reg.value("kv_tokens_peak") == 0
+    assert reg.value("kv_tokens_used") == 0
+    assert reg.value("kv_slots_in_use") == 0
+
+
+def test_kv_manager_reset_clears_all_occupancy():
+    from repro.serving.kv_manager import KVSlotManager
+
+    kv = KVSlotManager(num_slots=4, max_seq=32, capacity_tokens=100)
+    r = Request(rid=0, arrival=0.0, prompt_len=10, output_len=5,
+                spec=QoESpec(ttft=1.0, tds=4.8))
+    kv.allocate(r)
+    kv.grow(r, 3)
+    assert kv.tokens_used == 13 and kv.peak_tokens_used == 13
+    assert kv.slots_in_use == 1
+    occ = kv.occupancy()
+    assert occ["utilization"] == 13 / 100 and occ["slots_in_use"] == 1
+    kv.reset()
+    assert kv.tokens_used == 0 and kv.peak_tokens_used == 0
+    assert kv.slots_in_use == 0 and not kv.host_store and not kv.draft_store
+    assert kv.swap_bytes_total == 0
+
+
+# ---------------------------------------------------------------------------
+# Trace exports: JSONL, Chrome-trace/Perfetto
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def traced_run():
+    wl = make_workload(60, 8.0, seed=7, arrival="gamma", cv=3.0)
+    sim = make_sim(kv=12_000)
+    trace = TraceRecorder()
+    reg = MetricsRegistry()
+    sim.observer = compose(trace, MetricsObserver(reg, snapshot_every=5.0))
+    res = sim.run(wl)
+    return trace, reg, res
+
+
+def test_jsonl_round_trip(traced_run, tmp_path):
+    trace, _, _ = traced_run
+    evs = TraceRecorder.from_jsonl(trace.to_jsonl())
+    assert [e.to_json() for e in evs] == [e.to_json() for e in trace.events]
+    # and through a file
+    p = tmp_path / "trace.jsonl"
+    trace.save_jsonl(p)
+    evs2 = TraceRecorder.load_jsonl(p)
+    assert [e.to_json() for e in evs2] == [e.to_json() for e in trace.events]
+    # timestamps round-trip exactly (repr floats), so a reloaded trace
+    # still reconciles bit-for-bit
+    assert qoe_from_trace(evs2) == qoe_from_trace(trace.events)
+
+
+def test_chrome_trace_export_valid_and_monotone(traced_run, tmp_path):
+    trace, _, res = traced_run
+    ct = trace.to_chrome_trace()
+    # valid JSON, the format Perfetto/chrome://tracing loads
+    p = tmp_path / "trace.json"
+    trace.save_chrome_trace(p)
+    loaded = json.loads(p.read_text())
+    assert loaded == json.loads(json.dumps(ct))
+    assert loaded["displayTimeUnit"] == "ms"
+
+    events = loaded["traceEvents"]
+    phases = {e["ph"] for e in events}
+    assert "i" in phases and "X" in phases and "M" in phases
+    # per-track instants must be time-ordered (Perfetto requirement)
+    last = {}
+    for e in events:
+        if e["ph"] == "M":
+            continue
+        key = (e["pid"], e["tid"])
+        assert e["ts"] >= last.get(key, -1), key
+        last[key] = e["ts"]
+    # one span per finished/shed request, covering arrival -> end
+    spans = [e for e in events if e["ph"] == "X"]
+    assert len(spans) == len(res.requests)
+    assert all(s["dur"] >= 0 for s in spans)
+
+
+# ---------------------------------------------------------------------------
+# Metrics registry: Prometheus + JSON round-trips, snapshots, histograms
+# ---------------------------------------------------------------------------
+
+def test_prometheus_export_round_trip(traced_run):
+    _, reg, _ = traced_run
+    text = reg.to_prometheus()
+    assert "# TYPE requests_finished_total counter" in text
+    assert "# TYPE ttft_seconds histogram" in text
+    assert parse_prometheus(text) == registry_samples_dict(reg)
+
+
+def test_registry_json_round_trip(traced_run):
+    _, reg, _ = traced_run
+    clone = MetricsRegistry.from_json(reg.to_json())
+    assert registry_samples_dict(clone) == registry_samples_dict(reg)
+
+
+def test_snapshots_on_virtual_clock(traced_run):
+    _, reg, res = traced_run
+    assert reg.snapshots, "periodic snapshots never fired"
+    ts = [s["t"] for s in reg.snapshots]
+    assert ts == sorted(ts)
+    # snapshots ride the virtual clock, so they are bounded by the run
+    assert ts[-1] <= max(r.finish_time for r in res.requests)
+    # each snapshot carries full samples (find the finished counter)
+    names = {s[0] for s in reg.snapshots[-1]["samples"]}
+    assert "requests_finished_total" in names
+
+
+def test_histogram_buckets_cumulative():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat", "latency", buckets=(1.0, 2.0, 4.0))
+    for v in (0.5, 1.5, 1.7, 3.0, 100.0):
+        h.observe(v)
+    samples = {(name, tuple(sorted(labels.items()))): v
+               for name, labels, v in h.samples()}
+    assert samples[("lat_bucket", (("le", "1.0"),))] == 1
+    assert samples[("lat_bucket", (("le", "2.0"),))] == 3
+    assert samples[("lat_bucket", (("le", "4.0"),))] == 4
+    assert samples[("lat_bucket", (("le", "+Inf"),))] == 5
+    assert samples[("lat_count", ())] == 5
+    assert samples[("lat_sum", ())] == pytest.approx(106.7)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler decision + fleet event payloads
+# ---------------------------------------------------------------------------
+
+def test_scheduler_decision_events_carry_pricing_payload():
+    wl = make_workload(80, 8.0, seed=3, arrival="gamma", cv=3.0)
+    sim = make_sim(kv=12_000)
+    trace = TraceRecorder()
+    sim.observer = trace
+    sim.run(wl)
+
+    decisions = [e for e in trace.events if e.kind == "schedule"]
+    assert decisions
+    assert all(d.data["policy"] == "andes" for d in decisions)
+    triggered = [d for d in decisions if d.data.get("triggered")]
+    assert triggered, "tight KV never triggered the knapsack"
+    for d in triggered:
+        assert d.data["knapsack_value"] > -np.inf
+        assert d.data["b_chosen"] <= max(d.data["b_candidates"])
+        assert "q_wait_mean" in d.data        # BatchPricing.summary()
+        # the full gain vector rides along when the live set is small
+        if "gains" in d.data:
+            assert len(d.data["gains"]) == d.data["n_live"]
+    # a preempting decision names its victims
+    assert any(d.data["victims"] for d in triggered)
+
+
+def test_cluster_scale_events_carry_signal():
+    cfg = ClusterConfig(
+        n_replicas=1, router="qoe", kv_capacity_tokens=15_000,
+        autoscaler=AutoscalerConfig(
+            min_replicas=1, max_replicas=4,
+            provision_delay=5.0, cooldown=10.0, window=15.0,
+        ),
+    )
+    wl = make_workload(200, 8.0, seed=2, arrival="gamma", cv=3.0)
+    cs = ClusterSimulator(LAT, cfg)
+    trace = TraceRecorder(lifecycle_only=True)
+    cs.observer = trace
+    res = cs.run(wl)
+    assert res.peak_replicas > 1
+
+    scale = [e for e in trace.events if e.kind == "scale"]
+    ups = [e for e in scale if e.data["action"] == "scale_up"]
+    assert ups
+    for e in ups:
+        sig = e.data["signal"]
+        assert sig is not None and "slo_attainment" in sig
+    assert any(e.data["action"] == "provision_ready" for e in scale)
+    # routed emits carry the id of the replica that served them
+    replicas_seen = {e.replica for e in trace.events if e.kind == "emit"}
+    assert len(replicas_seen) > 1
+    # route decisions carry per-replica scores once the fleet has grown
+    routes = [e for e in trace.events if e.kind == "route"]
+    assert any(e.data["scores"] and len(e.data["scores"]) > 1
+               for e in routes)
+    assert_trace_reconciles(trace.events, res.admitted)
+
+
+# ---------------------------------------------------------------------------
+# Composition + legacy event_sink compatibility
+# ---------------------------------------------------------------------------
+
+def test_compose_flattens_and_filters():
+    a, b, c = TraceRecorder(), TraceRecorder(), TraceRecorder()
+    assert compose() is None
+    assert compose(None, None) is None
+    assert compose(a) is a
+    m = compose(a, None, compose(b, c))
+    assert isinstance(m, MultiObserver)
+    assert m.children == (a, b, c)
+
+
+def test_multi_observer_fans_out_and_scoped_stamps():
+    t1, t2 = TraceRecorder(), TraceRecorder()
+    m = MultiObserver(t1, t2)
+    r = Request(rid=9, arrival=0.0, prompt_len=4, output_len=2,
+                spec=QoESpec(ttft=1.0, tds=4.8))
+    m.submit(r, 0.0)
+    m.emit(r, 1.0, 1)
+    assert [e.kind for e in t1.events] == ["arrival", "first_token", "emit"]
+    assert [e.to_json() for e in t1.events] == [e.to_json()
+                                               for e in t2.events]
+
+    t3 = TraceRecorder()
+    s = ScopedObserver(t3, replica=5)
+    s.submit(r, 0.0)
+    s.emit(r, 1.0, 1)
+    assert all(e.replica == 5 for e in t3.events)
+    # an already-stamped event passes through untouched
+    s.emit(r, 2.0, 1, replica=7)
+    assert t3.events[-1].replica == 7
+
+
+def test_legacy_event_sink_still_works_and_composes():
+    wl = make_workload(40, 8.0, seed=3, arrival="gamma", cv=3.0)
+    base = make_sim(kv=12_000).run(copy.deepcopy(wl))
+
+    sim = make_sim(kv=12_000)
+    seen = []
+    trace = TraceRecorder()
+    sim.observer = trace                       # observer AND legacy sink
+    sim.event_sink = lambda kind, req, t, k: seen.append((kind, req.rid, k))
+    res = sim.run(copy.deepcopy(wl))
+
+    assert fingerprint(base.requests) == fingerprint(res.requests)
+    kinds = {kind for kind, _, _ in seen}
+    assert kinds >= {"emit", "finish"}
+    # the sink saw exactly the emitted tokens the trace saw
+    assert sum(k for kind, _, k in seen if kind == "emit") == \
+        sum(e.data["k"] for e in trace.events if e.kind == "emit")
+    # adapter maps hooks -> legacy (kind, req, t, k) tuples
+    sink_calls = []
+    ad = EventSinkAdapter(lambda *a: sink_calls.append(a))
+    r = res.requests[0]
+    ad.emit(r, 1.0, 2)
+    ad.finish(r, 2.0)
+    assert sink_calls == [("emit", r, 1.0, 2), ("finish", r, 2.0, 0)]
+
+
+def test_client_streaming_composes_with_observers():
+    """ServingClient (now observer-based) must coexist with a user trace:
+    both see the same stream, and behavior stays bit-identical."""
+    from repro.api import ServingClient
+
+    wl = make_workload(40, 4.0, seed=17, arrival="gamma", cv=3.0)
+    direct = make_sim().run(copy.deepcopy(wl))
+
+    sim = make_sim()
+    trace = TraceRecorder()
+    sim.observer = trace                      # user observer first
+    client = ServingClient(sim)               # client attaches alongside
+    handles = [client.submit_request(r) for r in copy.deepcopy(wl)]
+    client.drain()
+
+    d = {r.rid: r for r in direct.requests}
+    for h in handles:
+        assert d[h.rid].emit_times == h.request.emit_times
+        assert d[h.rid].final_qoe() == h.qoe()
+    assert_trace_reconciles(trace.events, [h.request for h in handles])
+
+
+def test_null_observer_is_inert_default():
+    """The Observer base is a pure no-op: every hook returns None, and an
+    unobserved backend holds no observer at all."""
+    obs = Observer()
+    r = Request(rid=0, arrival=0.0, prompt_len=4, output_len=2,
+                spec=QoESpec(ttft=1.0, tds=4.8))
+    assert obs.submit(r, 0.0) is None
+    assert obs.emit(r, 0.0, 1) is None
+    assert obs.schedule(0.0, {}) is None
+    sim = make_sim()
+    assert sim.obs is None and sim.observer is None
