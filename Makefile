@@ -1,8 +1,9 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-slow bench bench-api bench-cluster \
-        bench-cluster-engine bench-hotpath bench-obs bench-spec \
+.PHONY: test test-fast test-slow bench bench-api bench-arena \
+        bench-arena-smoke bench-cluster bench-cluster-engine \
+        bench-hotpath bench-obs bench-spec \
         example-quickstart example-cluster example-cluster-engine
 
 # ---- test tiers -----------------------------------------------------------
@@ -55,6 +56,17 @@ bench-hotpath:
 # overhead <= the gate; validates without rewriting BENCH_hotpath.json
 bench-obs:
 	$(PYTHON) -m benchmarks.engine_hotpath --obs
+
+# scheduling-policy arena (PR 7): policy x adversarial-trace x load sweep;
+# validates the checked-in BENCH_policy_arena.json scoreboard WITHOUT
+# rewriting it and exits nonzero on any gate failure (Andes must top avg
+# QoE, vtc/wsc must top Jain fairness). Regenerate with --write.
+bench-arena:
+	$(PYTHON) -m benchmarks.policy_arena
+
+# CI-sized arena: 2 policies x 1 trace x 1 rate, gates only, no artifact I/O
+bench-arena-smoke:
+	$(PYTHON) -m benchmarks.policy_arena --smoke
 
 example-quickstart:
 	$(PYTHON) examples/quickstart.py

@@ -26,6 +26,7 @@ from benchmarks import (
     fig16_18_sensitivity,
     fig21_norm_latency,
     kernels_micro,
+    policy_arena,
     roofline,
     table4_breakdown,
 )
@@ -43,6 +44,7 @@ MODULES = {
     "appendixA": appendixA_objectives,
     "cluster": cluster_qoe,
     "hotpath": engine_hotpath,
+    "arena": policy_arena,
     "kernels": kernels_micro,
     "roofline": roofline,
 }

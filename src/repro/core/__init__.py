@@ -30,15 +30,26 @@ from repro.core.qoe import (
     predict_request_qoe,
     qoe_exact,
 )
-from repro.core.scheduler import (
+from repro.core.policies import (
     SCHEDULERS,
     AndesDPScheduler,
     AndesScheduler,
+    BurstPreemptiveScheduler,
     FCFSScheduler,
     RoundRobinScheduler,
     Scheduler,
     SchedulerConfig,
+    SchedulingPolicy,
+    VTCScheduler,
+    WSCScheduler,
     make_scheduler,
+)
+from repro.core.scoring import (
+    fairness_report,
+    jains_index,
+    max_min_service,
+    per_tenant_service,
+    slo_goodput,
 )
 from repro.core.token_buffer import TokenBuffer
 
@@ -47,8 +58,13 @@ __all__ = [
     "FLEET_OBJECTIVES", "fleet_avg_qoe", "fleet_min_qoe", "fleet_slo_attainment",
     "HardwareSpec", "LatencyModel", "SpeculativeLatencyModel",
     "TPU_V5E", "TPU_V5E_POD", "A100_4X", "A40_4X",
-    "Scheduler", "SchedulerConfig", "FCFSScheduler", "RoundRobinScheduler",
-    "AndesScheduler", "AndesDPScheduler", "SCHEDULERS", "make_scheduler",
+    "Scheduler", "SchedulerConfig", "SchedulingPolicy",
+    "FCFSScheduler", "RoundRobinScheduler",
+    "AndesScheduler", "AndesDPScheduler",
+    "VTCScheduler", "WSCScheduler", "BurstPreemptiveScheduler",
+    "SCHEDULERS", "make_scheduler",
+    "jains_index", "slo_goodput", "per_tenant_service", "max_min_service",
+    "fairness_report",
     "TokenBuffer",
     "QoEPricer", "SLOContract", "placement_gain", "request_weight",
     "shared_token_rate", "slo_attained", "weighted_attainment",

@@ -436,6 +436,7 @@ class ServingEngine:
                                                    if self.spec_k else 0))
         else:
             self.kv.reset()
+        self.sched.reset()           # policy state (counters, orders)
         self.fluid = FluidQoE()
         self.spec_steps = 0          # verify iterations executed
         self.spec_proposed = 0       # draft tokens proposed per verify (k each)

@@ -148,6 +148,7 @@ class ServingSimulator:
 
     # ------------------------------------------------------------------ state
     def reset(self) -> None:
+        self.sched.reset()                   # policy state (counters, orders)
         self.fluid = FluidQoE()
         self._pending: List[Request] = []    # sorted arrivals; admitted
         self._pending_pos = 0                #   prefix tracked by cursor

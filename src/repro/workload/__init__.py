@@ -1,8 +1,13 @@
 from repro.workload.arrivals import gamma_arrivals, poisson_arrivals
 from repro.workload.multitenant import (
+    ADVERSARIAL_TRACES,
     DEFAULT_TENANTS,
     TenantSpec,
+    greedy_tenant_workload,
+    heavy_tail_workload,
+    make_adversarial_workload,
     make_multitenant_workload,
+    synchronized_burst_workload,
 )
 from repro.workload.qoe_traces import reading_qoe_trace, voice_qoe_trace
 from repro.workload.sharegpt import make_workload, sample_lengths
@@ -17,4 +22,9 @@ __all__ = [
     "TenantSpec",
     "DEFAULT_TENANTS",
     "make_multitenant_workload",
+    "ADVERSARIAL_TRACES",
+    "make_adversarial_workload",
+    "synchronized_burst_workload",
+    "heavy_tail_workload",
+    "greedy_tenant_workload",
 ]

@@ -17,6 +17,7 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.pricing import SLOContract
 from repro.core.qoe import QoESpec
 from repro.core.request import Request
 from repro.workload.arrivals import gamma_arrivals, poisson_arrivals
@@ -33,6 +34,16 @@ class TenantSpec:
     ttft: float = EXPECTED_TTFT  # expected TTFT (s); also the fixed-mode TTFT
     tds: float = 4.8             # fixed-mode expected TDS (tokens/s)
     dataset: str = "sharegpt"    # length distribution ("sharegpt"|"multiround")
+    weight: float = 1.0          # SLO contract weight (WSC fair share)
+    qoe_floor: Optional[float] = None   # per-tenant contract QoE floor
+
+    def contract(self) -> Optional[SLOContract]:
+        """SLOContract carried by this tenant's requests — only when the
+        tenant departs from the defaults, so pre-arena workloads are
+        byte-identical (contract=None prices as weight 1.0 everywhere)."""
+        if self.weight == 1.0 and self.qoe_floor is None:
+            return None
+        return SLOContract(weight=self.weight, qoe_floor=self.qoe_floor)
 
 
 # A plausible production mix: latency-stringent chat dominates, a voice
@@ -94,6 +105,7 @@ def make_multitenant_workload(
         for j, s in zip(idx, _tenant_specs(t, idx.size, rng)):
             specs[j] = s
 
+    contracts = [t.contract() for t in tenants]
     return [
         Request(
             rid=i,
@@ -102,7 +114,133 @@ def make_multitenant_workload(
             output_len=int(out[i]),
             spec=specs[i],
             tenant=int(tenant_ids[i]),
+            contract=contracts[tenant_ids[i]],
         )
         for i in range(n)
     ]
+
+
+# ---------------------------------------------------------------------------
+# Adversarial traces (the policy arena's referee workloads)
+#
+# Each generator builds the scenario a specific policy family is supposed
+# to win (or lose) — TokenFlow's synchronized bursts stress preemption,
+# heavy-tail prompt mixes stress memory packing, and a greedy tenant
+# stresses fairness isolation. All are deterministic in `seed` (pinned by
+# tests/test_workload.py) and return plain Request lists, so every backend
+# and policy consumes them unchanged.
+# ---------------------------------------------------------------------------
+
+def _retag(reqs: List[Request]) -> List[Request]:
+    """Re-id in arrival order (backends expect sorted submission)."""
+    reqs.sort(key=lambda r: (r.arrival, r.rid))
+    return [dataclasses.replace(r, rid=i) for i, r in enumerate(reqs)]
+
+
+def synchronized_burst_workload(
+    n: int,
+    rate: float,
+    *,
+    seed: int = 0,
+    burst_every: float = 30.0,
+    burst_frac: float = 0.5,
+    burst_width: float = 0.5,
+    tenants: Optional[Sequence[TenantSpec]] = None,
+) -> List[Request]:
+    """TokenFlow-style flash crowds: a `burst_frac` share of the traffic
+    lands in near-simultaneous spikes every `burst_every` seconds (each
+    spike `burst_width`s wide), on top of a smooth background. Buffer-
+    aware preemption should absorb the spikes by pausing full-buffer
+    requests; FCFS head-of-line blocks on them."""
+    base = make_multitenant_workload(n, rate, tenants=tenants, seed=seed,
+                                     arrival="poisson")
+    rng = np.random.default_rng(seed + 1)
+    n_burst = int(n * burst_frac)
+    horizon = max(r.arrival for r in base) if base else n / rate
+    n_spikes = max(int(horizon // burst_every), 1)
+    for r in base[-n_burst:]:
+        spike = (1 + int(rng.integers(n_spikes))) * burst_every
+        r.arrival = min(spike + float(rng.uniform(0.0, burst_width)),
+                        horizon)
+    return _retag(base)
+
+
+def heavy_tail_workload(
+    n: int,
+    rate: float,
+    *,
+    seed: int = 0,
+    tail_frac: float = 0.1,
+    tail_scale: float = 8.0,
+    tenants: Optional[Sequence[TenantSpec]] = None,
+) -> List[Request]:
+    """Heavy-tail prompt mix: a `tail_frac` share of requests carries
+    prompts ~`tail_scale`x the tenant's draw (Pareto-style elephants).
+    Elephants monopolize KV memory, so packing quality and preemption
+    policy dominate; token-counter fairness must not let one tenant's
+    elephants starve everyone's mice."""
+    base = make_multitenant_workload(n, rate, tenants=tenants, seed=seed)
+    rng = np.random.default_rng(seed + 2)
+    tail_idx = rng.choice(n, size=max(int(n * tail_frac), 1), replace=False)
+    tail = set(int(i) for i in tail_idx)
+    out = []
+    for r in base:
+        if r.rid in tail:
+            factor = tail_scale * float(rng.pareto(2.0) + 1.0)
+            r = dataclasses.replace(
+                r, prompt_len=int(min(r.prompt_len * factor, 8192)))
+        out.append(r)
+    return _retag(out)
+
+
+def greedy_tenant_workload(
+    n: int,
+    rate: float,
+    *,
+    seed: int = 0,
+    greedy_share: float = 0.7,
+    greedy_output: int = 512,
+    victim_weight: float = 2.0,
+    tenants: Optional[Sequence[TenantSpec]] = None,
+) -> List[Request]:
+    """One-greedy-tenant isolation test: tenant 0 ("greedy") floods
+    `greedy_share` of the volume with long outputs at contract weight 1,
+    while the well-behaved tenants keep the DEFAULT_TENANTS shapes but
+    carry `victim_weight` SLO contracts (they are the paying traffic the
+    flood is drowning). A fair policy caps the greedy tenant near its
+    entitlement (Jain's index over weight-normalized service stays
+    high) — and a *weighted* fair policy (WSC) should beat unweighted
+    VTC here, since only it reads the contracts. Throughput-greedy
+    policies let the flood starve everyone."""
+    tenants = list(tenants if tenants is not None else DEFAULT_TENANTS)
+    well_behaved = [dataclasses.replace(
+        t, weight=victim_weight,
+        share=t.share * (1.0 - greedy_share) / sum(
+            x.share for x in tenants))
+        for t in tenants]
+    mix = [TenantSpec("greedy", share=greedy_share, qoe="fixed",
+                      ttft=2.0, tds=6.0)] + well_behaved
+    base = make_multitenant_workload(n, rate, tenants=mix, seed=seed)
+    rng = np.random.default_rng(seed + 3)
+    out = []
+    for r in base:
+        if r.tenant == 0:     # the greedy tenant demands long generations
+            r = dataclasses.replace(
+                r, output_len=int(rng.integers(greedy_output // 2,
+                                               greedy_output + 1)))
+        out.append(r)
+    return _retag(out)
+
+
+ADVERSARIAL_TRACES = {
+    "burst": synchronized_burst_workload,
+    "heavy_tail": heavy_tail_workload,
+    "greedy_tenant": greedy_tenant_workload,
+}
+
+
+def make_adversarial_workload(name: str, n: int, rate: float,
+                              **kw) -> List[Request]:
+    """Build a named adversarial trace (see ADVERSARIAL_TRACES)."""
+    return ADVERSARIAL_TRACES[name](n, rate, **kw)
 

@@ -1,0 +1,350 @@
+"""Cross-policy conformance harness: the arena's shared contract.
+
+Every policy in `repro.core.policies.SCHEDULERS` — baselines, Andes
+(greedy + DP), the fairness counters, the burst-preemptive competitor —
+must pass one parametrized suite:
+
+  * protocol:        instances satisfy the `SchedulingPolicy` protocol
+  * KV budget:       no schedule() call ever returns a batch whose KV
+                     demand exceeds M (checked on EVERY call via a
+                     wrapped scheduler, not just on outcomes)
+  * conservation:    every request finishes with exactly its requested
+                     tokens; emissions are strictly ordered and never
+                     precede arrival
+  * preemption cap:  policies that declare `enforces_preemption_cap`
+                     keep avg preemptions/request <= cfg.preemption_cap
+  * reset():         rerunning the SAME backend reproduces the first
+                     run bit-for-bit (scheduler state fully cleared)
+  * determinism:     two fresh backends produce identical schedules —
+                     on the simulator for all policies, and on the real
+                     engine (k=0) for all policies
+
+Plus the observability half (ISSUE satellite): every policy's
+`scheduler.schedule` Observer events carry the acting policy's name and
+its pricing/decision summary, and QoE recomputed purely from the trace
+reconciles with the reported QoE under FCFS and VTC runs (not just
+Andes, which test_obs.py already pins).
+"""
+import copy
+
+import pytest
+
+from repro.configs import get_config
+from repro.core import A100_4X, LatencyModel, SchedulerConfig, make_scheduler
+from repro.core.policies import SCHEDULERS, SchedulingPolicy
+from repro.obs import TraceRecorder, qoe_from_trace
+from repro.serving.simulator import ServingSimulator, SimConfig
+from repro.workload import make_adversarial_workload, make_workload
+
+CFG = get_config("opt-66b")
+LAT = LatencyModel(CFG, A100_4X)
+KV = 12_000                      # contended: forces queueing + preemption
+POLICIES = sorted(SCHEDULERS)
+CAP_POLICIES = [p for p in POLICIES
+                if SCHEDULERS[p].enforces_preemption_cap]
+
+# the policy-specific decision payload every schedule event must carry
+# (beyond the universal policy/iteration/chosen/victims envelope)
+PAYLOAD_KEYS = {
+    "fcfs": {"kv_used"},
+    "round_robin": {"rotated", "kv_used"},
+    "andes": {"triggered"},
+    "andes_dp": {"triggered"},
+    "vtc": {"counter_gap", "n_tenants"},
+    "wsc": {"counter_gap", "n_tenants"},
+    "burst": {"slack_min", "n_starving"},
+}
+
+
+def mk_sim(policy, kv=KV, **sched_kw):
+    sched = make_scheduler(policy, kv, LAT, SchedulerConfig(), **sched_kw)
+    return ServingSimulator(sched, LAT, SimConfig(kv_capacity_tokens=kv))
+
+
+def contended_workload(n=80, seed=3):
+    return make_workload(n, 8.0, seed=seed, arrival="gamma", cv=3.0)
+
+
+def fingerprint(reqs):
+    return [(r.rid, r.generated, tuple(r.emit_times), r.preemptions,
+             r.final_qoe()) for r in sorted(reqs, key=lambda r: r.rid)]
+
+
+# ---------------------------------------------------------------------------
+# Protocol + registry
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_satisfies_scheduling_policy_protocol(policy):
+    sched = make_scheduler(policy, KV, LAT, SchedulerConfig())
+    assert isinstance(sched, SchedulingPolicy)
+    assert sched.name == policy
+    # fresh schedulers start zeroed (reset() ran in __init__)
+    assert sched.iteration == 0
+    assert sched.total_preemptions == 0
+    assert sched.total_requests == 0
+    assert sched.mean_output_len == 256.0          # estimator at its prior
+
+
+def test_registry_names_match_class_names():
+    for name, cls in SCHEDULERS.items():
+        assert cls.name == name
+
+
+# ---------------------------------------------------------------------------
+# KV budget: checked on every single schedule() call
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_kv_budget_never_exceeded(policy):
+    sim = mk_sim(policy)
+    sched = sim.sched
+    st = sched.cfg.state_equiv_tokens
+    calls = {"n": 0}
+    inner = sched.schedule
+
+    def checked(now, live, fluid):
+        batch = inner(now, live, fluid)
+        calls["n"] += 1
+        demand = sum(r.kv_tokens(st) for r in batch)
+        assert demand <= sched.M, \
+            f"{policy}: batch demands {demand} KV tokens > M={sched.M}"
+        assert len({r.rid for r in batch}) == len(batch), "duplicate rids"
+        return batch
+
+    sched.schedule = checked
+    sim.run(contended_workload())
+    assert calls["n"] > 50, "trace never exercised the scheduler"
+
+
+# ---------------------------------------------------------------------------
+# Conservation + emission ordering
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_token_conservation_and_emission_order(policy):
+    res = mk_sim(policy).run(contended_workload())
+    assert len(res.requests) == 80
+    for r in res.requests:
+        assert r.generated == r.output_len, \
+            f"{policy}: rid {r.rid} emitted {r.generated}/{r.output_len}"
+        assert len(r.emit_times) == r.output_len
+        # no emission before admission is possible: arrival + >0 prefill
+        assert r.emit_times[0] > r.arrival
+        assert all(a <= b for a, b in zip(r.emit_times, r.emit_times[1:]))
+
+
+# ---------------------------------------------------------------------------
+# Preemption cap (§4.2 #4) — for the policies that declare it
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", CAP_POLICIES)
+def test_preemption_cap_bounds_discretionary_preemptions(policy):
+    """The §4.2 #4 cap bounds *discretionary* preemptions; memory-forced
+    evictions are exempt (requests that no longer fit cannot be kept).
+    End-to-end pin: tightening the cap monotonically shrinks the
+    preemption count on the same trace, and an effectively-unbounded cap
+    preempts strictly more than a tight one."""
+    counts = {}
+    for cap in (0.0, 1.0, 1e9):
+        sched = make_scheduler(policy, KV, LAT,
+                               SchedulerConfig(preemption_cap=cap))
+        sim = ServingSimulator(sched, LAT, SimConfig(kv_capacity_tokens=KV))
+        counts[cap] = sim.run(contended_workload()).preemptions
+    assert counts[0.0] <= counts[1.0] <= counts[1e9], counts
+    assert counts[0.0] < counts[1e9], \
+        f"{policy}: cap has no effect ({counts})"
+
+
+def test_apply_preemption_cap_unit():
+    """The shared helper's exact guarantees, isolated from the serving
+    loop: budget-limited sparing keeps the cheapest-context victims
+    running, a zero budget spares every victim memory allows, and an
+    ample budget leaves the decision untouched."""
+    from repro.core import QoESpec
+    from repro.core.request import ReqState, Request
+
+    sched = make_scheduler("andes", 1000, LAT,
+                           SchedulerConfig(preemption_cap=1.0))
+
+    def mk(rid, ctx, state):
+        r = Request(rid=rid, arrival=0.0, prompt_len=ctx, output_len=8,
+                    spec=QoESpec(ttft=1.0, tds=4.8))
+        r.state = state
+        return r
+
+    running = [mk(0, 100, ReqState.RUNNING), mk(1, 200, ReqState.RUNNING),
+               mk(2, 300, ReqState.RUNNING)]
+    newcomer = mk(3, 150, ReqState.WAITING)
+    live = running + [newcomer]
+    weights = sched._weights(live)
+
+    # ample budget (10 requests seen, 0 preempted so far): untouched
+    sched.total_requests, sched.total_preemptions = 10, 0
+    chosen = [newcomer]
+    assert sched._apply_preemption_cap(chosen, running, weights, live) \
+        == chosen
+
+    # zero budget: every would-be victim is spared (memory allows all)
+    sched.total_requests, sched.total_preemptions = 10, 10
+    out = sched._apply_preemption_cap([newcomer], running, weights, live)
+    assert set(r.rid for r in out) == {0, 1, 2, 3}
+
+    # budget of exactly one: the HIGHEST-context victim is the one
+    # preempted (cheapest-to-keep are spared first)
+    sched.total_requests, sched.total_preemptions = 10, 9
+    out = sched._apply_preemption_cap([newcomer], running, weights, live)
+    assert set(r.rid for r in out) == {0, 1, 3}
+
+    # memory overrides sparing: with M too small for everyone, the spared
+    # running set is repacked under M (running kept ahead of admissions)
+    sched.M = 450
+    sched.total_requests, sched.total_preemptions = 10, 10
+    out = sched._apply_preemption_cap([newcomer], running, weights, live)
+    kept = {r.rid for r in out}
+    assert sum(r.kv_tokens() for r in out) <= 450
+    assert all(r.state == ReqState.RUNNING for r in out
+               if r.rid != 3) and kept <= {0, 1, 2, 3}
+
+
+def test_cap_flag_covers_andes_and_burst():
+    assert set(CAP_POLICIES) >= {"andes", "andes_dp", "burst"}
+
+
+# ---------------------------------------------------------------------------
+# reset() reproducibility + fresh-backend determinism (simulator)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_same_backend_rerun_is_bit_identical(policy):
+    """sim.run() calls reset(); a second run on the SAME simulator (same
+    scheduler object, counters/queues dirty from run 1) must reproduce
+    run 1 exactly — the policy's reset() has to clear everything."""
+    sim = mk_sim(policy)
+    wl = contended_workload()
+    first = sim.run(copy.deepcopy(wl))
+    assert sim.sched.total_requests > 0          # run 1 dirtied the state
+    second = sim.run(copy.deepcopy(wl))
+    assert fingerprint(first.requests) == fingerprint(second.requests)
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_fresh_backend_determinism(policy):
+    wl = contended_workload()
+    a = mk_sim(policy).run(copy.deepcopy(wl))
+    b = mk_sim(policy).run(copy.deepcopy(wl))
+    assert fingerprint(a.requests) == fingerprint(b.requests)
+
+
+@pytest.mark.parametrize("policy", ["vtc", "wsc", "burst"])
+def test_adversarial_trace_determinism(policy):
+    """The new policies on the traces built to stress them."""
+    wl = make_adversarial_workload("burst", 60, 6.0, seed=11)
+    a = mk_sim(policy).run([r.clone() for r in wl])
+    b = mk_sim(policy).run([r.clone() for r in wl])
+    assert fingerprint(a.requests) == fingerprint(b.requests)
+    assert all(r.generated == r.output_len for r in a.requests)
+
+
+# ---------------------------------------------------------------------------
+# Engine (k=0) determinism: every policy drives the real engine unchanged
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.models import Model
+
+    cfg = get_smoke_config("llama3-8b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _engine_workload(cfg, n=6, seed=5):
+    import numpy as np
+
+    from repro.core import QoESpec
+    from repro.serving import Request
+
+    rng = np.random.default_rng(seed)
+    wl = []
+    for i in range(n):
+        plen = int(rng.integers(8, 24))
+        wl.append(Request(
+            rid=i, arrival=i * 0.02, prompt_len=plen,
+            output_len=int(rng.integers(6, 12)),
+            spec=QoESpec(ttft=1.0, tds=4.8),
+            prompt_tokens=rng.integers(0, cfg.vocab_size, plen),
+        ))
+    return wl
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_engine_k0_rerun_determinism(engine_setup, policy):
+    from repro.core import TPU_V5E
+    from repro.serving import ServingEngine
+
+    cfg, model, params = engine_setup
+    lat = LatencyModel(cfg, TPU_V5E)
+    cap = 160                                   # 3 slots: forces queueing
+    eng = ServingEngine(model, params,
+                        make_scheduler(policy, cap, lat), lat,
+                        num_slots=3, max_seq=64, capacity_tokens=cap)
+    wl = _engine_workload(cfg)
+
+    wl1 = [r.clone() for r in wl]
+    eng.run(wl1)
+    wl2 = [r.clone() for r in wl]
+    eng.run(wl2)                                # same engine, after reset()
+
+    def fp(reqs):
+        return [(r.rid, tuple(r.output_tokens), tuple(r.emit_times),
+                 r.preemptions, r.final_qoe()) for r in reqs]
+
+    assert fp(wl1) == fp(wl2)
+    for r in wl1:
+        assert r.generated == r.output_len
+        assert r.emit_times[0] > r.arrival
+
+
+# ---------------------------------------------------------------------------
+# Observability: schedule events carry the acting policy + its summary,
+# and the trace reconciles under non-Andes policies too
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_schedule_events_carry_policy_name_and_summary(policy):
+    sim = mk_sim(policy)
+    trace = TraceRecorder()
+    sim.observer = trace
+    sim.run(contended_workload())
+
+    decisions = [e for e in trace.events if e.kind == "schedule"]
+    assert decisions
+    for d in decisions:
+        assert d.data["policy"] == policy
+        assert {"iteration", "n_live", "n_chosen",
+                "chosen", "victims"} <= set(d.data)
+    # the policy-specific pricing/decision summary rides along
+    want = PAYLOAD_KEYS[policy]
+    assert any(want <= set(d.data) for d in decisions), \
+        f"{policy}: no decision carried {want}"
+    if policy in ("andes", "andes_dp"):
+        triggered = [d for d in decisions if d.data.get("triggered")]
+        assert triggered, "tight KV never triggered the knapsack"
+        assert all("q_wait_mean" in d.data for d in triggered)
+
+
+@pytest.mark.parametrize("policy", ["fcfs", "vtc"])
+def test_trace_reconciles_under_non_andes_policies(policy):
+    sim = mk_sim(policy)
+    trace = TraceRecorder()
+    sim.observer = trace
+    res = sim.run(contended_workload())
+
+    traced = qoe_from_trace(trace.events)
+    for r in res.requests:
+        assert traced.get(r.rid, 0.0) == r.final_qoe(), r.rid

@@ -1,0 +1,246 @@
+"""Differential regression: the policy-arena refactor changed NOTHING.
+
+PR 7 moved the schedulers out of `core/scheduler.py` into
+`core/policies/` and grew a base class (`_pack_in_order`, shared
+`_apply_preemption_cap`, `reset()`), a protocol, and four new policies
+around them. The paper's scheduler must be bit-for-bit unaffected.
+
+`LegacyAndesScheduler` below is a frozen TRANSCRIPTION of the
+pre-refactor `AndesScheduler` (commit 2a8f9fb, the last commit before
+the arena) — every decision-path method copied into this file, sharing
+only the bookkeeping base. If a future edit to `policies/andes.py` or
+`policies/base.py` shifts even one emit timestamp, the fingerprint
+comparison here catches it; the oracle in this file must never be
+"fixed" to match (that is the regression).
+
+Also pinned: the vectorized `serve_gains_grid` rows are bit-identical to
+the legacy per-candidate pricing pass (scalar `predict_qoe` per B) — the
+claim `policies/andes.py` makes in its grid-pricing comment.
+"""
+from typing import List, Tuple
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import A100_4X, LatencyModel, SchedulerConfig
+from repro.core import objectives as obj_lib
+from repro.core.policies import AndesScheduler
+from repro.core.policies.base import Scheduler
+from repro.core.request import Request, ReqState
+from repro.serving.simulator import ServingSimulator, SimConfig
+from repro.workload import make_adversarial_workload, make_workload
+
+CFG = get_config("opt-66b")
+LAT = LatencyModel(CFG, A100_4X)
+KV = 12_000
+
+
+class LegacyAndesScheduler(Scheduler):
+    """Pre-refactor AndesScheduler, transcribed verbatim (frozen oracle).
+
+    Do NOT edit to track changes in policies/ — divergence from this
+    class IS the regression this file exists to catch."""
+
+    name = "andes"
+    solver = "greedy"
+
+    def schedule(self, now, live, fluid):
+        self.iteration += 1
+        if not live:
+            return []
+        running = [r for r in live if r.state == ReqState.RUNNING]
+        weights = self._weights(live)
+
+        if not self._legacy_triggered(live, running, weights):
+            return self._legacy_admit_all(live, weights)
+
+        b_min, b_max = self._legacy_batch_bounds(live, weights)
+        candidates = np.unique(
+            np.linspace(b_min, b_max, self.cfg.num_batch_candidates)
+            .round().astype(int)
+        )
+
+        bp = self.pricer.batch_pricing(now, live, fluid)
+        gain_fn = obj_lib.OBJECTIVES[self.cfg.objective]
+        is_running = np.array([r.state == ReqState.RUNNING for r in live])
+
+        gains_grid = self.pricer.serve_gains_grid(
+            now, fluid, bp, candidates, gain_fn
+        ) + self.cfg.stickiness * is_running
+        best = (-np.inf, None, None, 0)
+        for gains, b in zip(gains_grid, candidates):
+            sel, value = self._legacy_solve(gains, weights, int(b))
+            if value > best[0]:
+                best = (value, sel, gains, int(b))
+
+        chosen = [live[i] for i in np.nonzero(best[1])[0]]
+        return self._legacy_preemption_cap(chosen, running, live)
+
+    def idle_steps(self, live, max_steps):
+        if not live:
+            return 0
+        if any(r.state != ReqState.RUNNING for r in live):
+            return 0
+        stiffest = max((r.spec.tds for r in live), default=0.0)
+        if stiffest > 0 and \
+                self.lat.per_token_latency(len(live)) > 1.0 / stiffest:
+            return 0
+        st = self.cfg.state_equiv_tokens
+        demand = int(self._weights(live).sum())
+        cap = self.cfg.memory_watermark * self.M
+        if demand > cap:
+            return 0
+        grow = 0 if st else len(live)
+        if grow == 0:
+            return int(max_steps)
+        s = 0
+        while s < max_steps and demand + (s + 1) * grow <= cap:
+            s += 1
+        return s
+
+    def _legacy_triggered(self, live, running, weights) -> bool:
+        used = sum(r.kv_tokens(self.cfg.state_equiv_tokens) for r in running)
+        total_demand = int(weights.sum())
+        mem_pressure = total_demand > self.cfg.memory_watermark * self.M \
+            or used > self.cfg.memory_watermark * self.M
+        if mem_pressure:
+            return True
+        stiffest = max((r.spec.tds for r in live), default=0.0)
+        if stiffest <= 0:
+            return False
+        return self.lat.per_token_latency(len(live)) > 1.0 / stiffest
+
+    def _legacy_admit_all(self, live, weights) -> List[Request]:
+        order = sorted(range(len(live)), key=lambda i: live[i].arrival)
+        used, keep = 0, []
+        for i in order:
+            if used + weights[i] <= self.M:
+                keep.append(live[i])
+                used += int(weights[i])
+        return keep
+
+    def _legacy_batch_bounds(self, live, weights) -> Tuple[int, int]:
+        w_sorted = np.sort(weights)
+        fits = np.cumsum(w_sorted) <= self.M
+        b_max = max(int(fits.sum()), 1)
+        stiffest = max((r.spec.tds for r in live), default=1.0)
+        b_min = self.lat.max_batch_from_latency(1.0 / max(stiffest, 1e-9))
+        return max(1, min(b_min, b_max)), b_max
+
+    def _legacy_solve(self, gains, weights, b):
+        pri = gains / np.maximum(weights, 1)
+        order = np.argsort(-pri)
+        sel = np.zeros(len(gains), bool)
+        used = used_n = 0
+        value = 0.0
+        for i in order:
+            if used_n + 1 > b:
+                break
+            if used + weights[i] <= self.M:
+                sel[i] = True
+                used += int(weights[i])
+                used_n += 1
+                value += float(gains[i])
+        return sel, value
+
+    def _legacy_preemption_cap(self, chosen, running, live):
+        preempted = [r for r in running if r not in chosen]
+        if not preempted:
+            return chosen
+        budget = self.cfg.preemption_cap * max(self.total_requests, 1) \
+            - self.total_preemptions
+        allowed = max(int(budget), 0)
+        if len(preempted) <= allowed:
+            return chosen
+        preempted.sort(key=lambda r: r.context_len)
+        spared = preempted[: len(preempted) - allowed]
+        chosen = list(chosen) + spared
+        st = self.cfg.state_equiv_tokens
+        used = 0
+        final: List[Request] = []
+        for r in sorted(chosen, key=lambda r: r.state != ReqState.RUNNING):
+            w = r.kv_tokens(st)
+            if used + w <= self.M:
+                final.append(r)
+                used += w
+        return final
+
+
+def _fingerprint(reqs):
+    return [(r.rid, r.generated, tuple(r.emit_times), r.preemptions,
+             r.final_qoe()) for r in sorted(reqs, key=lambda r: r.rid)]
+
+
+def _simulate(sched_cls, workload, cap=1.0):
+    cfg = SchedulerConfig(preemption_cap=cap)
+    sched = sched_cls(KV, LAT, cfg)
+    sim = ServingSimulator(sched, LAT, SimConfig(kv_capacity_tokens=KV))
+    res = sim.run(workload)
+    return res, sched
+
+
+WORKLOADS = {
+    "contended": lambda: make_workload(80, 8.0, seed=3,
+                                       arrival="gamma", cv=3.0),
+    "burst": lambda: make_adversarial_workload("burst", 100, 6.0, seed=1),
+    "heavy_tail": lambda: make_adversarial_workload(
+        "heavy_tail", 80, 6.0, seed=2),
+}
+
+
+@pytest.mark.parametrize("trace", sorted(WORKLOADS))
+@pytest.mark.parametrize("cap", [0.25, 1.0])
+def test_andes_bit_for_bit_vs_prerefactor_oracle(trace, cap):
+    """Every emit timestamp, preemption count and final QoE produced by
+    the refactored AndesScheduler must equal the pre-refactor
+    transcription's — on bursty, heavy-tailed and contended traces, at a
+    tight and at the default preemption cap."""
+    res_new, s_new = _simulate(AndesScheduler, WORKLOADS[trace](), cap)
+    res_old, s_old = _simulate(LegacyAndesScheduler, WORKLOADS[trace](), cap)
+    assert _fingerprint(res_new.requests) == _fingerprint(res_old.requests)
+    assert res_new.makespan == res_old.makespan
+    assert res_new.preemptions == res_old.preemptions
+    assert res_new.iterations == res_old.iterations
+    assert res_new.batch_sizes == res_old.batch_sizes
+    assert s_new.total_preemptions == s_old.total_preemptions
+
+
+def test_serve_gains_grid_rows_match_legacy_per_b_pricing():
+    """The vectorized grid pricing (§4.2 #2/#3 hot path) must be
+    bit-identical to the legacy loop that priced each candidate B with a
+    scalar `predict_qoe` call — captured on real mid-run triggered
+    scheduler states, not synthetic ones."""
+    sched = AndesScheduler(KV, LAT, SchedulerConfig())
+    sim = ServingSimulator(sched, LAT, SimConfig(kv_capacity_tokens=KV))
+    states = []
+    inner = sched.schedule
+
+    def spy(now, live, fluid):
+        running = [r for r in live if r.state == ReqState.RUNNING]
+        w = sched._weights(live)
+        if live and sched._triggered(live, running, w) and len(states) < 8:
+            bp = sched.pricer.batch_pricing(now, live, fluid)
+            b_min, b_max = sched._batch_bounds(live, w)
+            cands = np.unique(
+                np.linspace(b_min, b_max, sched.cfg.num_batch_candidates)
+                .round().astype(int))
+            gain_fn = obj_lib.OBJECTIVES[sched.cfg.objective]
+            grid = sched.pricer.serve_gains_grid(now, fluid, bp, cands,
+                                                 gain_fn)
+            legacy = []
+            for b in cands:
+                rate = LAT.token_rate(int(b), int(b * bp.mean_ctx))
+                q_serve = fluid.predict_qoe(
+                    now, sched.cfg.delta_t, rate,
+                    bp.delays_slot, bp.exp_len)[bp.idx]
+                legacy.append(gain_fn(q_serve, bp.q_wait, bp.q_now)
+                              * bp.weights)
+            states.append((grid, np.stack(legacy)))
+        return inner(now, live, fluid)
+
+    sched.schedule = spy
+    sim.run(make_workload(60, 8.0, seed=3, arrival="gamma", cv=3.0))
+    assert states, "workload never triggered the knapsack"
+    for grid, legacy in states:
+        np.testing.assert_array_equal(grid, legacy)
