@@ -3,7 +3,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast test-slow bench bench-api bench-arena \
         bench-arena-smoke bench-cluster bench-cluster-engine \
-        bench-hotpath bench-obs bench-spec \
+        bench-hotpath bench-obs bench-scale bench-scale-smoke bench-spec \
         example-quickstart example-cluster example-cluster-engine
 
 # ---- test tiers -----------------------------------------------------------
@@ -56,6 +56,17 @@ bench-hotpath:
 # overhead <= the gate; validates without rewriting BENCH_hotpath.json
 bench-obs:
 	$(PYTHON) -m benchmarks.engine_hotpath --obs
+
+# 100x-scale section (PR 8): 1000-request heavy-tail trace, fixed-slot vs
+# paged+chunked at equal KV capacity; gates paged tokens/s >= fixed-slot
+# and strictly lower worst-case TTFT, then read-modify-writes the `scale`
+# key of BENCH_hotpath.json (nightly slow tier uploads the artifact)
+bench-scale:
+	$(PYTHON) -m benchmarks.engine_hotpath --scale
+
+# CI-sized scale run (<= 200 requests): same gates, no artifact rewrite
+bench-scale-smoke:
+	$(PYTHON) -m benchmarks.engine_hotpath --scale --smoke
 
 # scheduling-policy arena (PR 7): policy x adversarial-trace x load sweep;
 # validates the checked-in BENCH_policy_arena.json scoreboard WITHOUT

@@ -111,14 +111,15 @@ ttft = registry.get("ttft_seconds")
 print(f"   ttft_seconds                 count {ttft.count()} "
       f"mean {ttft.sum() / max(ttft.count(), 1):.2f}s")
 
-out = pathlib.Path(".")
+out = pathlib.Path("out")           # gitignored: run artifacts stay out of
+out.mkdir(exist_ok=True)            # the repo root / version control
 trace.save_jsonl(out / "quickstart_trace.jsonl")
 trace.save_chrome_trace(out / "quickstart_trace.perfetto.json")
 (out / "quickstart_metrics.prom").write_text(registry.to_prometheus())
 (out / "quickstart_metrics.json").write_text(
     json.dumps(registry.to_json(), indent=2) + "\n")
-print("\nwrote quickstart_trace.jsonl / quickstart_trace.perfetto.json "
-      "(load in ui.perfetto.dev) and quickstart_metrics.{prom,json}")
+print("\nwrote out/quickstart_trace.jsonl / out/quickstart_trace.perfetto.json "
+      "(load in ui.perfetto.dev) and out/quickstart_metrics.{prom,json}")
 
 # --- 6. policy arena head-to-head: Andes vs FCFS on a synchronized burst ----
 # Same trace, same simulator, two scheduling policies behind one protocol.

@@ -144,6 +144,38 @@ class LatencyModel:
         return self.hw.overhead + max(flops / self._agg_flops,
                                       bytes_ / self._agg_bw)
 
+    def prefill_chunk_latency(self, chunk_tokens: int,
+                              ctx_tokens: int) -> float:
+        """One chunked-prefill step: process `chunk_tokens` new prompt
+        tokens whose attention spans `ctx_tokens` of accumulated context.
+        Every chunk pays the fixed launch overhead, a full weight pass,
+        and the KV traffic of the prefix it attends over — so the summed
+        chunk cost strictly dominates the monolithic `prefill_latency`
+        and a chunked prompt's own TTFT under contention is honest (the
+        win is the residents it stops stalling, not its own latency)."""
+        flops = 2.0 * self.active_params * chunk_tokens
+        bytes_ = self.param_bytes + ctx_tokens * self.kv_tok_bytes
+        return self.hw.overhead + max(flops / self._agg_flops,
+                                      bytes_ / self._agg_bw)
+
+    def chunked_prefill_latency(self, total_tokens: int, chunk: int,
+                                start: int = 0) -> float:
+        """Total remaining prefill cost of a prompt split at `chunk`
+        tokens, resuming from a cursor at `start`. Prompts that fit one
+        chunk take the monolithic path (same float path as
+        `prefill_latency` — the engine's degenerate-case oracle).
+        `QoEPricer.serve_delay` prices a partially-prefilled resident by
+        the chunks it still owes through this."""
+        if chunk <= 0 or total_tokens <= chunk:
+            return self.prefill_latency(total_tokens - start)
+        t = 0.0
+        cur = start
+        while cur < total_tokens:
+            step = min(chunk, total_tokens - cur)
+            cur += step
+            t += self.prefill_chunk_latency(step, cur)
+        return t
+
     # -- preemption (Appendix D) --------------------------------------------------
 
     def swap_latency(self, ctx_tokens: int) -> float:

@@ -134,6 +134,18 @@ class AndesScheduler(Scheduler):
         grow = 0 if st else len(live)
         if grow == 0:
             return int(max_steps)
+        p = self.cfg.page_size
+        if p > 1:
+            # paged capacity view: a request's page weight is flat until
+            # its context crosses a page boundary, then jumps by a whole
+            # page — project the page-rounded demand exactly rather than
+            # the +1-token-per-request linear form
+            toks = np.array([r.kv_tokens(st) for r in live], np.int64)
+            s = 0
+            while s < max_steps and \
+                    int((-(-(toks + s + 1) // p) * p).sum()) <= cap:
+                s += 1
+            return s
         # largest s with demand + s*grow <= cap (float comparison matches
         # _triggered's `total_demand > watermark * M` exactly)
         s = 0
@@ -142,7 +154,7 @@ class AndesScheduler(Scheduler):
         return s
 
     def _triggered(self, live, running, weights) -> bool:
-        used = sum(r.kv_tokens(self.cfg.state_equiv_tokens) for r in running)
+        used = sum(self._kv_weight(r) for r in running)
         total_demand = int(weights.sum())
         mem_pressure = total_demand > self.cfg.memory_watermark * self.M \
             or used > self.cfg.memory_watermark * self.M

@@ -40,6 +40,14 @@ class SchedulerConfig:
     objective: str = "avg_qoe"
     num_batch_candidates: int = 12   # B grid size within [B_min, B_max]
     state_equiv_tokens: int = 0      # SSM archs: constant weight per request
+    page_size: int = 0               # paged KV: knapsack weights / capacity
+                                     # views round up to page multiples so
+                                     # the memory trigger and packing see
+                                     # what admission will actually charge
+                                     # (0 = token-granular, the legacy view)
+    prefill_chunk: int = 0           # chunked prefill: serve-delay pricing
+                                     # charges per-chunk costs instead of one
+                                     # monolithic prefill (0 = unchunked)
     min_remaining_est: float = 64.0  # floor on l̂ − emitted (length estimator)
     stickiness: float = 0.02         # priority bonus for running requests
                                      # (hysteresis: suppresses preemption churn
@@ -137,9 +145,20 @@ class Scheduler:
         return (self._len_sum / self._len_n) if self._len_n >= 10 else 256.0
 
     # -- bookkeeping helpers -------------------------------------------------
+    def _kv_weight(self, r: Request) -> int:
+        """One request's KV footprint as the capacity view prices it:
+        token-granular by default; rounded up to whole pages when the
+        backend's KV manager is paged (cfg.page_size), so the knapsack /
+        memory trigger charge what allocation will actually take from the
+        pool. page_size=0 reproduces the legacy integers bit-for-bit."""
+        w = r.kv_tokens(self.cfg.state_equiv_tokens)
+        p = self.cfg.page_size
+        if p > 1:
+            return -(-w // p) * p
+        return w
+
     def _weights(self, reqs: Sequence[Request]) -> np.ndarray:
-        st = self.cfg.state_equiv_tokens
-        return np.array([r.kv_tokens(st) for r in reqs], np.int64)
+        return np.array([self._kv_weight(r) for r in reqs], np.int64)
 
     def on_request_arrival(self, req: Request) -> None:
         self.total_requests += 1
@@ -202,11 +221,10 @@ class Scheduler:
         priority order (skipping requests that no longer fit — arena
         policies that rank by counters/slack use this; FCFS keeps its own
         head-of-line-blocking admission verbatim)."""
-        st = self.cfg.state_equiv_tokens
         used = 0
         keep: List[Request] = []
         for r in ordered:
-            w = r.kv_tokens(st)
+            w = self._kv_weight(r)
             if used + w <= self.M:
                 keep.append(r)
                 used += w
@@ -230,12 +248,11 @@ class Scheduler:
         spared = preempted[: len(preempted) - allowed]
         chosen = list(chosen) + spared
         # re-enforce memory by dropping admitted (non-running) requests
-        st = self.cfg.state_equiv_tokens
         used = 0
         final: List[Request] = []
         # running first (sparing them is the point), then the rest
         for r in sorted(chosen, key=lambda r: r.state != ReqState.RUNNING):
-            w = r.kv_tokens(st)
+            w = self._kv_weight(r)
             if used + w <= self.M:
                 final.append(r)
                 used += w

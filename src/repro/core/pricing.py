@@ -193,8 +193,11 @@ def placement_components(
     # demand has to drain (at the aggregate token rate) before its KV fits
     wait1 = max(demand + footprint - M, 0) / max(rate1 * (b + 1), 1e-9)
     # prefill serialization: every committed-but-unprefilled request blocks
-    # the engine for its prefill before the newcomer's can run (non-chunked
-    # prefill, §2.2). During a burst this is the *leading* congestion
+    # the engine for its prefill before the newcomer's can run (§2.2; on a
+    # chunked-prefill engine the blocking is per chunk rather than per
+    # prompt, but the total backlog drained ahead of the newcomer is the
+    # same order — the monolithic sum stays the routing-level estimate).
+    # During a burst this is the *leading* congestion
     # signal — KV and rate terms only move once damage is already done —
     # and it is hardware-aware (slow chips prefill slower).
     prefill_backlog = sum(
@@ -324,11 +327,25 @@ class QoEPricer:
         return self.sched.mean_output_len
 
     def serve_delay(self, r: Request) -> float:
-        """Time before tokens start flowing if we serve this request."""
+        """Time before tokens start flowing if we serve this request.
+        On a chunked-prefill backend (cfg.prefill_chunk) a partially
+        prefilled resident is priced like any other request: by the
+        chunks it still owes before its first token can flow — the
+        knapsack sees an honest TTFT, not the RUNNING-state zero."""
+        chunk = self.sched.cfg.prefill_chunk
         if r.state == ReqState.RUNNING:
+            if chunk and r.prefill_cursor:
+                return self.lat.chunked_prefill_latency(
+                    r.context_len, chunk, start=r.prefill_cursor)
             return 0.0
         if r.state == ReqState.SWAPPED:
-            return self.lat.swap_latency(r.context_len)
+            d = self.lat.swap_latency(r.context_len)
+            if chunk and r.prefill_cursor:
+                d += self.lat.chunked_prefill_latency(
+                    r.context_len, chunk, start=r.prefill_cursor)
+            return d
+        if chunk:
+            return self.lat.chunked_prefill_latency(r.context_len, chunk)
         return self.lat.prefill_latency(r.prompt_len)
 
     def batch_pricing(self, now: float, live: List[Request],

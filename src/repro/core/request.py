@@ -39,6 +39,10 @@ class Request:
     generated: int = 0
     emit_times: List[float] = dataclasses.field(default_factory=list)
     preemptions: int = 0
+    prefill_cursor: int = 0      # chunked prefill: context tokens already
+                                 # committed to the device cache; 0 when not
+                                 # mid-prefill (engine clears it on the
+                                 # final chunk / recompute preemption)
     fluid_idx: int = -1          # slot in the scheduler's FluidQoE arrays
     engine_slot: int = -1        # slot in the static KV cache (engine)
     prefilled: bool = False      # KV/state for the prompt exists somewhere

@@ -14,6 +14,20 @@ A single pytree carries everything the decode step needs:
 Static shapes are deliberate (TPU/XLA); token-granular *accounting* for the
 scheduler happens in serving/kv_manager.py, not here. See DESIGN.md §3.
 
+Paged KV (PR 8) does not change this layout: pages and block tables are
+HOST-SIDE accounting constructs. The device cache stays one fixed-depth
+row per slot — a request's tokens are physically contiguous in its row —
+while `KVSlotManager` tracks which logical pages of the shared capacity
+budget each resident's context occupies (`block_table`), charges
+admission/growth in page granularity, and frees tail pages on partial
+eviction. That split keeps every jitted shape static (no gather over a
+physical page pool on the hot path) yet gives the scheduler the paged
+capacity arithmetic that lets equal token capacity back 4x the resident
+slots. `length` stays the single validity gate either way: chunked
+prefill commits a growing prefix into the same row and re-pins `length`
+at each chunk, so a partially-prefilled slot is always a valid context
+prefix to attention.
+
 Speculative-decoding rollback contract (`with_lengths`): for attention
 caches, `length` alone defines validity — attention never reads past it,
 and decode/verify writes always land at the current `length`, so entries a

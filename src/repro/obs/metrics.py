@@ -376,6 +376,7 @@ class MetricsObserver(Observer):
         self._deferred_n = 0
         self._tokens_n = 0
         self._prefill_n = 0
+        self._chunks_n = 0
         self._swapins_n = 0
         r.counter("requests_submitted_total",
                   "requests that entered the system"
@@ -396,6 +397,9 @@ class MetricsObserver(Observer):
         r.counter("prefill_tokens_total",
                   "prompt tokens prefetched/prefilled"
                   ).set_fn(lambda: float(self._prefill_n))
+        r.counter("prefill_chunks_total",
+                  "chunked-prefill chunks committed"
+                  ).set_fn(lambda: float(self._chunks_n))
         r.counter("swap_ins_total", "swapped requests restored to device"
                   ).set_fn(lambda: float(self._swapins_n))
         self._preempts = r.counter(
@@ -456,6 +460,10 @@ class MetricsObserver(Observer):
 
     def prefill(self, req, t, n_tokens, *, replica=-1):
         self._prefill_n += n_tokens
+        self._tick(t)
+
+    def prefill_chunk(self, req, t, cursor, total, *, replica=-1):
+        self._chunks_n += 1
         self._tick(t)
 
     def emit(self, req, t, k=1, *, replica=-1):
@@ -553,3 +561,19 @@ def register_backend_gauges(registry: MetricsRegistry, backend,
              lambda: backend.kv.slots_in_use)
         bind("kv_swap_bytes_total", "bytes moved by KV swap in/out",
              lambda: backend.kv.swap_bytes_total)
+        bind("kv_swaps_out_total", "requests parked to host by swap_out",
+             lambda: getattr(backend.kv, "swaps_out_total", 0))
+        bind("kv_drops_total", "KV slices discarded by drop()",
+             lambda: getattr(backend.kv, "drops_total", 0))
+        bind("kv_dropped_bytes_total",
+             "parked host/draft bytes discarded by drop()",
+             lambda: getattr(backend.kv, "dropped_bytes_total", 0))
+        if getattr(kv, "paged", False):
+            bind("kv_pages_used", "KV pages currently allocated",
+                 lambda: backend.kv.pages_used)
+            bind("kv_pages_peak", "peak KV pages allocated",
+                 lambda: backend.kv.peak_pages_used)
+            bind("kv_pages_total", "KV page-pool capacity",
+                 lambda: backend.kv.total_pages)
+            bind("kv_page_utilization", "KV page occupancy / page pool",
+                 lambda: backend.kv.page_utilization)

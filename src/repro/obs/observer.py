@@ -55,6 +55,11 @@ class Observer:
     def prefill(self, req, t, n_tokens, *, replica=-1):
         """Prompt (or recompute) prefill of `n_tokens` charged at `t`."""
 
+    def prefill_chunk(self, req, t, cursor, total, *, replica=-1):
+        """One chunk of a chunked prefill committed: `cursor` of `total`
+        context tokens are now resident on-device (the `prefill` hook
+        still fires once when the final chunk lands)."""
+
     def emit(self, req, t, k=1, *, replica=-1):
         """`k` tokens delivered to the client at `t`."""
 
@@ -117,7 +122,8 @@ class Observer:
 #: forwarders are generated from this list so new hooks only need a
 #: definition on Observer plus an entry here.
 HOOK_NAMES = (
-    "submit", "admit", "prefill", "emit", "preempt", "swap_in", "finish",
+    "submit", "admit", "prefill", "prefill_chunk", "emit", "preempt",
+    "swap_in", "finish",
     "shed", "defer",
     "schedule", "multi_step",
     "route", "admission", "scale",

@@ -119,6 +119,10 @@ class TraceRecorder(Observer):
     def prefill(self, req, t, n_tokens, *, replica=-1):
         self._rec("prefill", t, req.rid, replica, n_tokens=int(n_tokens))
 
+    def prefill_chunk(self, req, t, cursor, total, *, replica=-1):
+        self._rec("prefill_chunk", t, req.rid, replica,
+                  cursor=int(cursor), total=int(total))
+
     def emit(self, req, t, k=1, *, replica=-1):
         # hottest hook (per token): TraceEvent built inline, no _rec hop
         rid = req.rid

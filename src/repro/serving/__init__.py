@@ -1,6 +1,10 @@
 from repro.serving.engine import BucketedPrefill, HotpathConfig, ServingEngine
 from repro.serving.kv_manager import KVSlotManager
 from repro.core.request import Request, ReqState
+from repro.serving.lossless import (FLIP_TOL, all_flips_documented,
+                                    audit_flips, classify_flip, exact_margin,
+                                    fingerprint, first_divergence,
+                                    timing_fingerprint)
 from repro.serving.simulator import ServingSimulator, SimConfig, SimResult
 from repro.serving.speculative import DraftProposer, check_speculation_compatible
 
@@ -9,4 +13,6 @@ __all__ = [
     "HotpathConfig", "BucketedPrefill",
     "ServingSimulator", "SimConfig", "SimResult",
     "DraftProposer", "check_speculation_compatible",
+    "FLIP_TOL", "fingerprint", "timing_fingerprint", "first_divergence",
+    "exact_margin", "classify_flip", "audit_flips", "all_flips_documented",
 ]

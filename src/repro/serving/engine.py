@@ -98,6 +98,45 @@ differential suites run with them enabled):
 ``hotpath_stats()`` reports host syncs, prefill compile signatures, and
 multi-step block counts — benchmarks/engine_hotpath.py gates the speedup
 and compile-count claims on them.
+
+Scale substrate (PR 8): chunked prefill + paged KV
+--------------------------------------------------
+Two knobs turn the 8-slot smoke engine into a 100x-scale serving
+substrate (benchmarks/engine_hotpath.py --scale drives a 1000-request
+heavy-tail trace through them):
+
+* **Chunked prefill** (``prefill_chunk`` > 0): a prompt longer than the
+  chunk size no longer monopolizes the device for one monolithic
+  prefill. Admission commits only the first chunk; the request then
+  holds its slot with a ``prefill_cursor`` and advances one chunk per
+  scheduled iteration, interleaved with every other resident's decode
+  tick — the §2.2 TTFT/TDS interference knob. The chunk-scheduling
+  contract: a mid-prefill request is a RUNNING resident (the Andes
+  knapsack prices it through ``QoEPricer.serve_delay`` by the chunks it
+  still owes), it never joins the decode batch while its cursor is
+  nonzero, KV charges grow chunk-by-chunk (page-granular when paged),
+  and preemption either parks the committed prefix (swap; the cursor
+  survives and chunking resumes after swap-in) or rewinds the cursor to
+  zero (recompute). Each chunk recomputes the prefix at the cursor's
+  bucket through the SAME jitted bucketed call the monolithic path
+  uses, so the final chunk — full prompt length, full-length bucket —
+  is bit-identical to the monolithic prefill: committed cache and first
+  token match exactly (the differential oracle in
+  tests/test_chunked_prefill.py), while the per-chunk
+  ``LatencyModel.prefill_chunk_latency`` keeps its TTFT honest.
+  Requires the bucketed prefill path (non-MoE) and ``spec_k=0``.
+
+* **Paged KV** (``page_size``): ``KVSlotManager`` prices capacity as a
+  pool of fixed-size pages with a block table per request
+  (serving/kv_manager.py module docstring has the layout) —
+  admission/`grow` charge whole pages, preemption returns partial
+  pages, and the scheduler's capacity views round knapsack weights up
+  to page multiples (``SchedulerConfig.page_size``, wired
+  automatically). The device cache stays per-slot rows; pages govern
+  accounting granularity. ``page_size=None`` (or >= max_seq) is the
+  legacy fixed-depth manager bit-for-bit; ``page_size=1`` reproduces
+  token-granular admission exactly (both pinned differentially in
+  tests/test_paged_kv.py).
 """
 from __future__ import annotations
 
@@ -350,6 +389,8 @@ class ServingEngine:
         draft_params=None,
         spec_k: int = 0,
         hotpath: Optional[HotpathConfig] = None,
+        prefill_chunk: int = 0,
+        page_size: Optional[int] = None,
     ):
         self.model = model
         self.params = params
@@ -420,7 +461,24 @@ class ServingEngine:
         # eager exact-length path (tests/test_hotpath.py pins the
         # exclusion); every other family buckets and batches.
         self._prefill_bucketable = model.cfg.kind != "moe"
+        # ---- scale substrate: chunked prefill + paged KV (PR 8) --------
+        self.prefill_chunk = int(prefill_chunk)
+        self._page_size = page_size
+        if self.prefill_chunk:
+            if self.spec_k:
+                raise ValueError("chunked prefill requires spec_k=0")
+            if not (self.hotpath.prefill_buckets
+                    and self._prefill_bucketable):
+                raise ValueError(
+                    "chunked prefill requires the bucketed prefill path "
+                    "(hotpath.prefill_buckets=True, non-MoE model)")
         self.reset()
+        # scheduler capacity/pricing views follow the engine's granularity
+        # (only when the caller hasn't configured them explicitly)
+        if self.kv.paged and not self.sched.cfg.page_size:
+            self.sched.cfg.page_size = self.kv.page_size
+        if self.prefill_chunk and not self.sched.cfg.prefill_chunk:
+            self.sched.cfg.prefill_chunk = self.prefill_chunk
 
     # ------------------------------------------------------------------ state
     def reset(self) -> None:
@@ -433,7 +491,8 @@ class ServingEngine:
             self.kv = KVSlotManager(self._num_slots, self.max_seq,
                                     self._capacity_tokens,
                                     burst_reserve=(self.spec_k + 1
-                                                   if self.spec_k else 0))
+                                                   if self.spec_k else 0),
+                                    page_size=self._page_size)
         else:
             self.kv.reset()
         self.sched.reset()           # policy state (counters, orders)
@@ -613,6 +672,53 @@ class ServingEngine:
         frames = getattr(r, "frames", None) if self._prefill.enc_seq else None
         return _StagedPrefill(r, slot, toks, emit_t, frames)
 
+    # ------------------------------------------------------ chunked prefill
+    def _should_chunk(self, r: Request) -> bool:
+        """Route this admission through chunked prefill? Only prompts
+        longer than one chunk, and only when the staged machinery applies
+        (the same exclusions as `_can_stage_prefill`: the final chunk's
+        first token must not be able to finish the request mid-flush)."""
+        return (self.prefill_chunk > 0
+                and r.context_len > self.prefill_chunk
+                and self._can_stage_prefill(r))
+
+    def _stage_chunk(self, r: Request) -> _StagedPrefill:
+        """Advance one chunked prefill by one chunk: commit up to
+        `prefill_chunk` more context tokens, stage the device recompute
+        of the prefix at the new cursor's bucket (the same jitted
+        bucketed call the monolithic path makes — so the FINAL chunk,
+        whose prefix is the whole prompt, is bit-identical to monolithic
+        prefill), and tick the per-chunk cost. On the final chunk the
+        first-token bookkeeping fires exactly as `_stage_prefill`'s."""
+        toks = self._prompt_tokens(r)
+        total = len(toks)
+        if r.prefill_cursor == 0:                  # admission: first chunk
+            slot = self.kv.allocate(r, tokens=0)
+            self.slot_req[slot] = r
+        else:
+            slot = r.engine_slot
+        step = min(self.prefill_chunk, total - r.prefill_cursor)
+        r.prefill_cursor += step
+        self.kv.grow(r, step)
+        self._tick(self.lat.prefill_chunk_latency(step, r.prefill_cursor))
+        if self.obs is not None:
+            self.obs.prefill_chunk(r, self.now, r.prefill_cursor, total)
+        prefix = toks[: r.prefill_cursor]
+        emit_t = None
+        if r.prefill_cursor >= total:              # final chunk
+            r.prefill_cursor = 0
+            if self.obs is not None:
+                self.obs.prefill(r, self.now, total)
+            if r.generated == 0:
+                emit_t = self.now
+                r.generated = 1
+                r.emit_times.append(emit_t)
+                self.fluid.emit(r.fluid_idx, emit_t, 1)
+                self.kv.grow(r)
+                self.total_tokens += 1
+        frames = getattr(r, "frames", None) if self._prefill.enc_seq else None
+        return _StagedPrefill(r, slot, prefix, emit_t, frames)
+
     def _flush_prefills(self, staged: List[_StagedPrefill]) -> None:
         """Run every staged admission's device work (the shared
         `BucketedPrefill.prefill_into` grouped flush). First-token
@@ -772,11 +878,15 @@ class ServingEngine:
             draft_slice = self.draft.park(slot) if self.spec_k else None
             self.kv.swap_out(r, host_slice, draft_slice)
             r.state = ReqState.SWAPPED
-            self._tick(self.lat.swap_latency(r.context_len))
+            # a mid-prefill victim only moves its committed prefix (the
+            # cursor survives; chunking resumes after swap-in)
+            self._tick(self.lat.swap_latency(
+                r.prefill_cursor or r.context_len))
         else:
             self.kv.drop(r)
             r.state = ReqState.WAITING
             r.prefilled = False
+            r.prefill_cursor = 0        # recompute rewinds the chunk cursor
         self.slot_req.pop(slot, None)
         self.sched.record_preemptions(1)
         if self.obs is not None:
@@ -785,7 +895,7 @@ class ServingEngine:
     def _swap_in(self, r: Request) -> None:
         host_slice = self.kv.swap_in(r)
         draft_slice = self.kv.swap_in_draft(r)
-        slot = self.kv.allocate(r)
+        slot = self.kv.allocate(r, tokens=(r.prefill_cursor or None))
         self.cache = _write_slot(
             self.cache, jax.tree.map(jnp.asarray, host_slice), slot
         )
@@ -795,7 +905,7 @@ class ServingEngine:
             self._dispatch("write")
         self.slot_req[slot] = r
         r.state = ReqState.RUNNING
-        self._tick(self.lat.swap_latency(r.context_len))
+        self._tick(self.lat.swap_latency(r.prefill_cursor or r.context_len))
         if self.obs is not None:
             self.obs.swap_in(r, self.now)
 
@@ -1034,28 +1144,45 @@ class ServingEngine:
         n_admitted = 0
         staged: List[_StagedPrefill] = []
         for r in target:
-            if r.state == ReqState.SWAPPED and self.kv.can_allocate(r):
+            if r.state == ReqState.SWAPPED and self.kv.can_allocate(
+                    r, tokens=(r.prefill_cursor or None)):
                 self._swap_in(r)
                 n_admitted += 1
-            elif r.state == ReqState.WAITING and self.kv.can_allocate(r):
-                r.state = ReqState.RUNNING
-                r.prefilled = True
-                if self._can_stage_prefill(r):
-                    staged.append(self._stage_prefill(r))
-                else:
-                    # a sequential prefill fires its emit (and possibly
-                    # finish) events inline — flush what is staged first
-                    # so event-sink chronology matches the sequential
-                    # path (earlier admissions report first)
-                    self._flush_prefills(staged)
-                    staged = []
-                    self._prefill_request(r)
+            elif r.state == ReqState.RUNNING and r.prefill_cursor:
+                # chunked prefill in flight: the resident advances one
+                # chunk per scheduled iteration, interleaved with every
+                # other slot's decode tick (it joins the decode batch
+                # only once the cursor completes)
+                staged.append(self._stage_chunk(r))
                 n_admitted += 1
+            elif r.state == ReqState.WAITING:
+                if self._should_chunk(r):
+                    # finer-grained admission: only the first chunk's
+                    # tokens (pages) need to fit right now
+                    if self.kv.can_allocate(r, tokens=self.prefill_chunk):
+                        r.state = ReqState.RUNNING
+                        r.prefilled = True
+                        staged.append(self._stage_chunk(r))
+                        n_admitted += 1
+                elif self.kv.can_allocate(r):
+                    r.state = ReqState.RUNNING
+                    r.prefilled = True
+                    if self._can_stage_prefill(r):
+                        staged.append(self._stage_prefill(r))
+                    else:
+                        # a sequential prefill fires its emit (and possibly
+                        # finish) events inline — flush what is staged first
+                        # so event-sink chronology matches the sequential
+                        # path (earlier admissions report first)
+                        self._flush_prefills(staged)
+                        staged = []
+                        self._prefill_request(r)
+                    n_admitted += 1
         self._flush_prefills(staged)
 
         # ---- decode over all occupied slots ---------------------------
         active = {s: r for s, r in self.slot_req.items()
-                  if r.state == ReqState.RUNNING}
+                  if r.state == ReqState.RUNNING and not r.prefill_cursor}
         self.batch_sizes.append(len(active))
         committed_iters = 1
         if active:

@@ -1,0 +1,124 @@
+"""Losslessness fingerprints and the near-tie flip classifier.
+
+The hot-path benchmark (PR 5) and the differential test suites all make
+the same two promises about an engine rewrite:
+
+* **exact** — token ids, emission timestamps, preemptions, and final QoE
+  reproduce the reference bit-for-bit (`fingerprint`);
+* **timing-exact** — the virtual-clock half alone (`timing_fingerprint`),
+  used against the pre-PR-5 legacy engine whose *prefill numerics* differ:
+  padded, lengths-masked bucketed prefill is mathematically equivalent to
+  exact-length prefill but not bitwise equal (last-ulp reduction-order
+  differences), so a greedy argmax near-tie can flip a token id.
+
+This module is the single owner of what "documented ulp flip" means.
+The initial perturbation is last-ulp scale (the padded-vs-exact logit
+gap measures ~1e-6 on the smoke model, pinned in
+tests/test_lossless_flips.py), but it does not stay there: the cache
+rows it lands in feed every subsequent decode step, so by the position
+where a token actually flips the accumulated divergence can reach the
+1e-3 scale. A flip is therefore ACCEPTABLE iff, at the first diverging
+position, the exact-length model's top-2 logit margin is below
+`FLIP_TOL` — the two paths disagreed only where the model sat in its
+indecision tail, where amplified float noise is the deciding vote.
+Anything larger is a real numerical divergence and the benchmark gate
+(and the pinned test in tests/test_lossless_flips.py) fails.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+#: largest exact-path top-2 logit margin a padded-vs-exact prefill flip
+#: may hide behind. Measured on the smoke model's 50-request benchmark
+#: trace: all observed flips sit at margins 4e-4..9e-3, while the
+#: model's typical margins run p10 ~1.1e-2 / median ~6e-2 — the gate
+#: sits in the gap, above every amplified-noise flip and below the
+#: decided bulk of the margin distribution.
+FLIP_TOL = 1e-2
+
+
+def fingerprint(out) -> list:
+    """Everything exact losslessness promises: token ids, emit
+    timestamps, preemptions, final QoE."""
+    return [(r.rid, tuple(r.output_tokens), tuple(r.emit_times),
+             r.preemptions, r.final_qoe()) for r in out]
+
+
+def timing_fingerprint(out) -> list:
+    """The virtual-clock half of the promise (token-id-agnostic)."""
+    return [(r.rid, r.generated, tuple(r.emit_times), r.preemptions,
+             r.final_qoe()) for r in out]
+
+
+def first_divergence(a_tokens, b_tokens) -> Optional[int]:
+    """Index of the first position where two token streams disagree
+    (length mismatch counts at the shared-prefix boundary); None when
+    identical."""
+    n = min(len(a_tokens), len(b_tokens))
+    for i in range(n):
+        if a_tokens[i] != b_tokens[i]:
+            return i
+    return None if len(a_tokens) == len(b_tokens) else n
+
+
+def exact_margin(model, params, prompt_tokens, prefix) -> float:
+    """Top-2 logit margin of the EXACT-LENGTH path at the position that
+    emitted token `len(prefix)`: prefill `prompt + prefix` at its true
+    length (batch 1, no padding) and measure how decided the model was.
+
+    This is the reference the flip classifier trusts: the exact-length
+    forward is the numerics both engines are approximating, so its margin
+    at the divergence point is the honest size of the tie."""
+    toks = np.concatenate([
+        np.asarray(prompt_tokens, np.int32),
+        np.asarray(list(prefix), np.int32),
+    ]) if len(prefix) else np.asarray(prompt_tokens, np.int32)
+    s = int(toks.shape[0])
+    cache = model.init_cache(1, s + 1, enc_seq=model.enc_seq(s + 1))
+    logits, _ = model.prefill(params, {"tokens": jnp.asarray(toks[None, :])},
+                              cache)
+    row = np.asarray(logits[0], np.float64)
+    top2 = np.partition(row, -2)[-2:]
+    return float(top2[1] - top2[0])
+
+
+def classify_flip(margin: float, tol: float = FLIP_TOL) -> str:
+    """'documented_ulp_flip' when the exact path was indifferent at
+    float-noise scale; 'real_divergence' otherwise."""
+    return "documented_ulp_flip" if abs(margin) <= tol else "real_divergence"
+
+
+def audit_flips(model, params, out_a, out_b,
+                tol: float = FLIP_TOL) -> List[dict]:
+    """Compare two runs of the same workload request-by-request and
+    classify every token-id mismatch. Returns one record per diverging
+    request: rid, first diverging position, the exact-path top-2 margin
+    there, and the classification. An empty list means token-identical."""
+    flips = []
+    by_rid = {r.rid: r for r in out_b}
+    for ra in out_a:
+        rb = by_rid.get(ra.rid)
+        if rb is None:
+            continue
+        pos = first_divergence(ra.output_tokens, rb.output_tokens)
+        if pos is None:
+            continue
+        prefix = ra.output_tokens[:pos]
+        margin = exact_margin(model, params, ra.prompt_tokens, prefix)
+        flips.append({
+            "rid": int(ra.rid),
+            "position": int(pos),
+            "margin": margin,
+            "classification": classify_flip(margin, tol),
+        })
+    return flips
+
+
+def all_flips_documented(flips: List[dict]) -> bool:
+    """The benchmark's tolerance gate: every observed flip must be a
+    documented ulp flip (margin within FLIP_TOL); vacuously true when
+    the runs were token-identical."""
+    return all(f["classification"] == "documented_ulp_flip" for f in flips)

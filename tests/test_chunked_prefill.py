@@ -1,0 +1,225 @@
+"""Chunked prefill (PR 8): differential oracles, interleaving, pricing.
+
+The chunk design is masked recompute: each chunk re-runs the bucketed
+prefill of ``toks[:cursor]`` at ``bucket(cursor)``, so the FINAL chunk —
+whose prefix is the whole prompt — is the identical jitted call the
+monolithic path makes. Committed cache contents and the first token are
+therefore bit-identical to monolithic prefill *by construction*; these
+tests pin that construction.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import (
+    LatencyModel,
+    QoESpec,
+    SchedulerConfig,
+    TPU_V5E,
+    make_scheduler,
+)
+from repro.core.request import ReqState
+from repro.models import Model
+from repro.obs import MetricsObserver, MetricsRegistry, TraceRecorder
+from repro.serving import Request, ServingEngine, fingerprint
+from repro.serving.engine import _read_slot
+
+
+@pytest.fixture(scope="module")
+def llama():
+    cfg = get_smoke_config("llama3-8b")
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+def _mk_workload(cfg, n, rng, out_len=10, stagger=0.05, pmin=5, pmax=40):
+    wl = []
+    for i in range(n):
+        plen = int(rng.integers(pmin, pmax))
+        wl.append(Request(
+            rid=i, arrival=i * stagger, prompt_len=plen, output_len=out_len,
+            spec=QoESpec(ttft=1.0, tds=4.8),
+            prompt_tokens=rng.integers(0, cfg.vocab_size, plen)))
+    return wl
+
+
+def _mk_engine(cfg, m, params, **kw):
+    lat = LatencyModel(cfg, TPU_V5E)
+    sched = make_scheduler("andes", 4 * 64, lat, SchedulerConfig())
+    return ServingEngine(m, params, sched, lat, num_slots=4, max_seq=64, **kw)
+
+
+def _run(cfg, m, params, wl, **kw):
+    eng = _mk_engine(cfg, m, params, **kw)
+    out = eng.run([r.clone() for r in wl], max_iterations=4000)
+    return out, eng
+
+
+def test_chunk_larger_than_prompts_is_identity(llama):
+    """No prompt exceeds the chunk: the chunked engine never engages the
+    chunk path and must be bit-for-bit the default engine — tokens,
+    timestamps, preemptions, QoE."""
+    cfg, m, params = llama
+    rng = np.random.default_rng(0)
+    wl = _mk_workload(cfg, 6, rng)
+    base, _ = _run(cfg, m, params, wl)
+    chunked, _ = _run(cfg, m, params, wl, prefill_chunk=48)
+    assert fingerprint(chunked) == fingerprint(base)
+
+
+def test_chunked_tokens_match_monolithic(llama):
+    """Small chunk: timing differs (chunks are priced per chunk) but the
+    committed token ids must be identical — the differential oracle for
+    the masked-recompute construction."""
+    cfg, m, params = llama
+    rng = np.random.default_rng(2)
+    wl = _mk_workload(cfg, 6, rng, pmin=10, pmax=40)
+    base, _ = _run(cfg, m, params, wl)
+    chunked, eng = _run(cfg, m, params, wl, prefill_chunk=8)
+    assert eng.prefill_chunk == 8
+    base_toks = {r.rid: list(r.output_tokens) for r in base}
+    assert {r.rid: list(r.output_tokens) for r in chunked} == base_toks
+    assert all(r.generated >= r.output_len for r in chunked)
+
+
+def test_committed_cache_bit_identical(llama):
+    """One long prompt through chunk=8 vs monolithic: after both runs the
+    request's cache row (keys/values written by prefill + decode) must be
+    bit-identical — the final chunk IS the monolithic jitted call."""
+    cfg, m, params = llama
+    rng = np.random.default_rng(3)
+    plen = 37
+    wl = [Request(rid=0, arrival=0.0, prompt_len=plen, output_len=8,
+                  spec=QoESpec(ttft=1.0, tds=4.8),
+                  prompt_tokens=rng.integers(0, cfg.vocab_size, plen))]
+    _, eng_a = _run(cfg, m, params, wl)
+    _, eng_b = _run(cfg, m, params, wl, prefill_chunk=8)
+    row_a = _read_slot(eng_a.cache, 0)
+    row_b = _read_slot(eng_b.cache, 0)
+    for leaf_a, leaf_b in zip(jax.tree.leaves(row_a), jax.tree.leaves(row_b)):
+        np.testing.assert_array_equal(np.asarray(leaf_a), np.asarray(leaf_b))
+
+
+def test_chunks_interleave_with_decode(llama):
+    """The point of chunking: while a long prompt prefills chunk by
+    chunk, already-resident requests keep emitting tokens. The trace
+    must show emit events for other requests BETWEEN the long request's
+    first and last prefill_chunk events."""
+    cfg, m, params = llama
+    rng = np.random.default_rng(4)
+    wl = [Request(rid=i, arrival=0.0, prompt_len=6, output_len=30,
+                  spec=QoESpec(ttft=1.0, tds=4.8),
+                  prompt_tokens=rng.integers(0, cfg.vocab_size, 6))
+          for i in range(3)]
+    wl.append(Request(rid=3, arrival=0.05, prompt_len=48, output_len=8,
+                      spec=QoESpec(ttft=1.0, tds=4.8),
+                      prompt_tokens=rng.integers(0, cfg.vocab_size, 48)))
+    eng = _mk_engine(cfg, m, params, prefill_chunk=8)
+    trace = TraceRecorder()
+    eng.observer = trace
+    eng.run([r.clone() for r in wl], max_iterations=4000)
+    chunk_idx = [i for i, ev in enumerate(trace.events)
+                 if ev.kind == "prefill_chunk" and ev.rid == 3]
+    assert len(chunk_idx) == 6                 # ceil(48 / 8)
+    cursors = [trace.events[i].data["cursor"] for i in chunk_idx]
+    assert cursors == [8, 16, 24, 32, 40, 48]
+    interleaved = [ev for ev in trace.events[chunk_idx[0]:chunk_idx[-1]]
+                   if ev.kind == "emit" and ev.rid != 3]
+    assert interleaved, "no decode progress during the chunked prefill"
+
+
+def test_prefill_chunk_metrics_counter(llama):
+    cfg, m, params = llama
+    rng = np.random.default_rng(5)
+    wl = _mk_workload(cfg, 6, rng, pmin=4, pmax=40, stagger=0.2)
+    eng = _mk_engine(cfg, m, params, prefill_chunk=8)
+    reg = MetricsRegistry()
+    eng.observer = MetricsObserver(reg)
+    out = eng.run([r.clone() for r in wl], max_iterations=4000)
+    assert eng.preemptions == 0                # else recompute re-chunks
+    expected = sum(-(-r.prompt_len // 8) for r in wl if r.prompt_len > 8)
+    assert reg.value("prefill_chunks_total") == expected
+    assert all(r.generated >= r.output_len for r in out)
+
+
+def test_chunked_with_preemption_completes(llama):
+    """Chunked prefill under contention, both preemption modes: cursors
+    must survive swap round-trips and rewind on recompute, and the trace
+    must still drain completely."""
+    cfg, m, params = llama
+    lat = LatencyModel(cfg, TPU_V5E)
+    rng = np.random.default_rng(6)
+    wl = _mk_workload(cfg, 8, rng, out_len=12, stagger=0.01,
+                      pmin=10, pmax=40)
+    for mode in ("swap", "recompute"):
+        sched = make_scheduler("andes", 100, lat,
+                               SchedulerConfig(delta_t=5.0))
+        eng = ServingEngine(m, params, sched, lat, num_slots=2, max_seq=64,
+                            capacity_tokens=100, preemption_mode=mode,
+                            prefill_chunk=8)
+        out = eng.run([r.clone() for r in wl], max_iterations=4000)
+        assert all(r.generated >= r.output_len for r in out), mode
+        assert all(r.prefill_cursor == 0 for r in out), mode
+
+
+def test_chunk_requires_bucketed_prefill(llama):
+    """Chunking is built on the staged bucketed-prefill machinery; an
+    engine without it (the legacy baseline hot path) must refuse the
+    flag loudly instead of silently serving monolithic."""
+    from repro.serving import HotpathConfig
+
+    cfg, m, params = llama
+    lat = LatencyModel(cfg, TPU_V5E)
+    sched = make_scheduler("andes", 256, lat, SchedulerConfig())
+    with pytest.raises(ValueError):
+        ServingEngine(m, params, sched, lat, num_slots=4, max_seq=64,
+                      prefill_chunk=8, hotpath=HotpathConfig.baseline())
+
+
+# --------------------------------------------------------------------------
+# pricing: the knapsack sees honest chunked TTFTs
+# --------------------------------------------------------------------------
+def test_latency_model_chunk_costs():
+    cfg = get_smoke_config("llama3-8b")
+    lat = LatencyModel(cfg, TPU_V5E)
+    # sum of per-chunk costs, exact
+    manual = (lat.prefill_chunk_latency(8, 8)
+              + lat.prefill_chunk_latency(8, 16)
+              + lat.prefill_chunk_latency(4, 20))
+    assert lat.chunked_prefill_latency(20, 8) == pytest.approx(manual)
+    # degenerate: one chunk == monolithic prefill
+    assert lat.chunked_prefill_latency(20, 32) == lat.prefill_latency(20)
+    assert lat.chunked_prefill_latency(20, 0) == lat.prefill_latency(20)
+    # a mid-prefill resume prices only the remaining chunks
+    resumed = lat.chunked_prefill_latency(20, 8, start=16)
+    assert resumed == pytest.approx(lat.prefill_chunk_latency(4, 20))
+    # chunking adds per-chunk overhead: never cheaper than monolithic
+    assert lat.chunked_prefill_latency(64, 8) > lat.prefill_latency(64)
+
+
+def test_serve_delay_prices_chunks():
+    cfg = get_smoke_config("llama3-8b")
+    lat = LatencyModel(cfg, TPU_V5E)
+    chunked = make_scheduler("andes", 1024, lat,
+                             SchedulerConfig(prefill_chunk=8))
+    legacy = make_scheduler("andes", 1024, lat, SchedulerConfig())
+    r = Request(rid=0, arrival=0.0, prompt_len=40, output_len=8,
+                spec=QoESpec(ttft=1.0, tds=4.8))
+    # WAITING: the chunked backend owes every chunk
+    assert chunked.pricer.serve_delay(r) == pytest.approx(
+        lat.chunked_prefill_latency(40, 8))
+    assert legacy.pricer.serve_delay(r) == lat.prefill_latency(40)
+    # RUNNING mid-prefill: remaining chunks only (not the RUNNING zero)
+    r.state = ReqState.RUNNING
+    r.prefill_cursor = 16
+    assert chunked.pricer.serve_delay(r) == pytest.approx(
+        lat.chunked_prefill_latency(40, 8, start=16))
+    r.prefill_cursor = 0
+    assert chunked.pricer.serve_delay(r) == 0.0
+    # SWAPPED mid-prefill: swap restore + remaining chunks
+    r.state = ReqState.SWAPPED
+    r.prefill_cursor = 16
+    assert chunked.pricer.serve_delay(r) == pytest.approx(
+        lat.swap_latency(40) + lat.chunked_prefill_latency(40, 8, start=16))

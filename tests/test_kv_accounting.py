@@ -1,0 +1,227 @@
+"""KV-accounting bugfix regressions (PR 8).
+
+Two bugs, two pinned failure modes:
+
+1. `can_allocate` used to charge `burst_reserve` ONCE per admission.
+   The reserve models speculative verify growth — up to k+1 tokens per
+   step — but EVERY resident can take that step simultaneously, so the
+   headroom must scale with the resident count. The regression here
+   builds the k=4 synchronized-verify-burst scenario in which the old
+   formula admits a request whose admission makes simultaneous bursts
+   overfill capacity; post-fix admission refuses it.
+
+2. `drop()` used to silently discard parked host slices: a swapped-out
+   request that was then shed (or preempted again by recompute) vanished
+   from the ledger with no counter movement, while `swap_out` counted
+   its bytes in. Now drops are first-class: `drops_total` /
+   `dropped_bytes_total` in `occupancy()` and the kv_* gauges, aligned
+   with `swaps_out_total` — over both preemption modes.
+"""
+import numpy as np
+import pytest
+
+from repro.core import QoESpec
+from repro.serving import KVSlotManager, Request
+
+
+def mk_req(rid, ctx, out_len=8):
+    return Request(rid=rid, arrival=0.0, prompt_len=ctx, output_len=out_len,
+                   spec=QoESpec(ttft=1.0, tds=4.8))
+
+
+# --------------------------------------------------------------------------
+# bugfix 1: burst reserve must scale with the resident count
+# --------------------------------------------------------------------------
+class TestBurstReserve:
+    K = 4                       # speculative depth: verify grows <= k+1
+    RESERVE = K + 1             # per-request worst-case growth per step
+
+    def test_reserve_scales_with_residents(self):
+        """The k=4 synchronized-burst scenario. 3 residents at 20 tokens
+        each, capacity 85: the old once-per-admission check (60 + 20 + 5
+        = 85 <= 85) would admit a fourth 20-token request — after which
+        ONE synchronized verify burst (+5 tokens x 4 residents) needs
+        100 > 85 tokens. Post-fix the reserve is charged per resident
+        (60 + 20 + 5*4 = 100 > 85) and admission refuses."""
+        kv = KVSlotManager(num_slots=4, max_seq=64, capacity_tokens=85,
+                           burst_reserve=self.RESERVE)
+        residents = [mk_req(i, 20) for i in range(3)]
+        for r in residents:
+            assert kv.can_allocate(r)
+            kv.allocate(r)
+        assert kv.tokens_used == 60
+        candidate = mk_req(3, 20)
+        # THE regression assertion: fails pre-fix (old formula admits)
+        assert not kv.can_allocate(candidate)
+
+    def test_overfill_demonstration(self):
+        """What admission-by-the-old-formula leads to: force-allocate the
+        fourth request anyway and let every resident take one verify
+        burst — capacity is overfilled. This is the harm the per-resident
+        reserve exists to prevent (the ledger tolerates the overdraft;
+        admission must not create it)."""
+        kv = KVSlotManager(num_slots=4, max_seq=64, capacity_tokens=85,
+                           burst_reserve=self.RESERVE)
+        reqs = [mk_req(i, 20) for i in range(4)]
+        for r in reqs:
+            kv.allocate(r)          # bypasses can_allocate, as the old bug did
+        for r in reqs:              # one synchronized verify burst at k=4
+            kv.grow(r, self.RESERVE)
+        assert kv.tokens_used == 100 > kv.capacity_tokens
+
+    def test_reserve_headroom_is_sufficient(self):
+        """Admission the fixed check allows really does survive a
+        synchronized burst: capacity 100 admits the fourth request, and
+        the worst-case burst lands exactly at capacity."""
+        kv = KVSlotManager(num_slots=4, max_seq=64, capacity_tokens=100,
+                           burst_reserve=self.RESERVE)
+        reqs = [mk_req(i, 20) for i in range(4)]
+        for r in reqs[:3]:
+            kv.allocate(r)
+        assert kv.can_allocate(reqs[3])
+        kv.allocate(reqs[3])
+        for r in reqs:
+            kv.grow(r, self.RESERVE)
+        assert kv.tokens_used <= kv.capacity_tokens
+
+    def test_zero_reserve_unchanged(self):
+        """burst_reserve=0 (every non-speculative engine) is untouched by
+        the fix: admission is the plain token check."""
+        kv = KVSlotManager(num_slots=4, max_seq=64, capacity_tokens=60)
+        for i in range(2):
+            kv.allocate(mk_req(i, 20))
+        assert kv.can_allocate(mk_req(2, 20))
+        assert not kv.can_allocate(mk_req(3, 21))
+
+    def test_reserve_counts_candidate_in_paged_pool(self):
+        """The paged admission check prices need+reserve in pages with
+        the same per-resident scaling."""
+        kv = KVSlotManager(num_slots=4, max_seq=64, capacity_tokens=85,
+                           burst_reserve=self.RESERVE, page_size=5)
+        for i in range(3):
+            kv.allocate(mk_req(i, 20))
+        assert not kv.can_allocate(mk_req(3, 20))
+
+
+# --------------------------------------------------------------------------
+# bugfix 2: drop() accounts for discarded parked slices
+# --------------------------------------------------------------------------
+def _host_slice(n_bytes):
+    return {"k": np.zeros(n_bytes, np.uint8)}
+
+
+class TestDropAccounting:
+    def test_drop_of_parked_request_counts_bytes(self):
+        """swap mode then shed: the parked slice's bytes were counted in
+        by swap_out; the discard must show up in dropped_bytes_total —
+        pre-fix this silently vanished (fails pre-fix: the counters did
+        not exist)."""
+        kv = KVSlotManager(num_slots=2, max_seq=32, capacity_tokens=64)
+        r = mk_req(0, 10)
+        kv.allocate(r)
+        kv.swap_out(r, _host_slice(1024))
+        assert kv.swaps_out_total == 1
+        assert kv.swap_bytes_total == 1024
+        kv.drop(r)                        # shed while parked
+        assert kv.drops_total == 1
+        assert kv.dropped_bytes_total == 1024
+        assert len(kv.host_store) == 0
+
+    def test_drop_of_resident_recompute_mode(self):
+        """recompute mode: nothing is parked, so a drop frees slot and
+        pages and counts the event with zero discarded bytes."""
+        kv = KVSlotManager(num_slots=2, max_seq=32, capacity_tokens=64,
+                           page_size=8)
+        r = mk_req(0, 10)
+        kv.allocate(r)
+        assert kv.pages_used == 2
+        kv.drop(r)
+        assert kv.drops_total == 1
+        assert kv.dropped_bytes_total == 0
+        assert kv.pages_used == 0
+        assert kv.slots_in_use == 0
+
+    def test_draft_slice_counted(self):
+        """A speculative request's parked draft slice rides along: its
+        bytes count in on swap_out and out on drop."""
+        kv = KVSlotManager(num_slots=2, max_seq=32, capacity_tokens=64)
+        r = mk_req(0, 10)
+        kv.allocate(r)
+        kv.swap_out(r, _host_slice(1000), draft_slice=_host_slice(500))
+        assert kv.swap_bytes_total == 1500
+        kv.drop(r)
+        assert kv.dropped_bytes_total == 1500
+        assert len(kv.draft_store) == 0
+
+    def test_occupancy_exposes_both_mode_counters(self):
+        """occupancy() — the gauge source — carries the swap and drop
+        ledgers side by side (fails pre-fix: keys absent)."""
+        kv = KVSlotManager(num_slots=2, max_seq=32, capacity_tokens=64)
+        occ = kv.occupancy()
+        for key in ("swaps_out_total", "drops_total",
+                    "dropped_bytes_total", "swap_bytes_total"):
+            assert key in occ
+        r0, r1 = mk_req(0, 8), mk_req(1, 8)
+        kv.allocate(r0)
+        kv.allocate(r1)
+        kv.swap_out(r0, _host_slice(64))      # swap-mode preemption
+        kv.drop(r1)                           # recompute-mode preemption
+        kv.drop(r0)                           # shed of the parked one
+        occ = kv.occupancy()
+        assert occ["swaps_out_total"] == 1
+        assert occ["drops_total"] == 2
+        assert occ["dropped_bytes_total"] == 64
+
+    def test_reset_clears_ledgers(self):
+        kv = KVSlotManager(num_slots=2, max_seq=32, capacity_tokens=64)
+        r = mk_req(0, 8)
+        kv.allocate(r)
+        kv.swap_out(r, _host_slice(64))
+        kv.drop(r)
+        kv.reset()
+        occ = kv.occupancy()
+        assert occ["swaps_out_total"] == 0
+        assert occ["drops_total"] == 0
+        assert occ["dropped_bytes_total"] == 0
+        assert occ["swap_bytes_total"] == 0
+
+
+# --------------------------------------------------------------------------
+# engine integration: both preemption modes move the right counters
+# --------------------------------------------------------------------------
+@pytest.mark.slow
+@pytest.mark.parametrize("mode", ["swap", "recompute"])
+def test_engine_preemption_moves_mode_counters(mode):
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.core import LatencyModel, SchedulerConfig, TPU_V5E, make_scheduler
+    from repro.models import Model
+    from repro.serving import ServingEngine
+
+    cfg = get_smoke_config("llama3-8b")
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    lat = LatencyModel(cfg, TPU_V5E)
+    rng = np.random.default_rng(1)
+    wl = []
+    for i in range(8):
+        plen = int(rng.integers(5, 20))
+        wl.append(Request(
+            rid=i, arrival=i * 0.01, prompt_len=plen, output_len=15,
+            spec=QoESpec(ttft=1.0, tds=4.8),
+            prompt_tokens=rng.integers(0, cfg.vocab_size, plen)))
+    sched = make_scheduler("andes", 100, lat, SchedulerConfig(delta_t=5.0))
+    eng = ServingEngine(m, params, sched, lat, num_slots=2, max_seq=64,
+                        capacity_tokens=100, preemption_mode=mode)
+    eng.run(wl, max_iterations=2000)
+    assert eng.preemptions > 0, "test requires contention"
+    occ = eng.kv.occupancy()
+    if mode == "swap":
+        assert occ["swaps_out_total"] == eng.preemptions
+        assert occ["swap_bytes_total"] > 0
+        assert occ["drops_total"] == 0
+    else:
+        assert occ["drops_total"] == eng.preemptions
+        assert occ["dropped_bytes_total"] == 0    # nothing was parked
+        assert occ["swaps_out_total"] == 0

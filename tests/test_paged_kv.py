@@ -1,0 +1,241 @@
+"""Paged/block KV accounting (PR 8): manager unit tests + the
+degenerate-case differential oracles that pin the refactor.
+
+The two degenerate configurations reproduce the legacy fixed-slot
+manager exactly (see kv_manager module docstring):
+
+  * page_size >= max_seq — literally the legacy code path (paged=False);
+  * page_size = 1 — one page per token, so page arithmetic IS token
+    arithmetic and a paged ENGINE must reproduce the default engine
+    bit-for-bit: token ids, emit timestamps, preemptions, final QoE.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import (
+    LatencyModel,
+    QoESpec,
+    SchedulerConfig,
+    TPU_V5E,
+    make_scheduler,
+)
+from repro.core.policies.base import Scheduler
+from repro.models import Model
+from repro.serving import KVSlotManager, Request, ServingEngine, fingerprint
+
+
+def mk_req(rid, ctx, out_len=8):
+    return Request(rid=rid, arrival=0.0, prompt_len=ctx, output_len=out_len,
+                   spec=QoESpec(ttft=1.0, tds=4.8))
+
+
+# --------------------------------------------------------------------------
+# manager unit tests
+# --------------------------------------------------------------------------
+class TestPagedManager:
+    def test_pool_sizing_and_pages_for(self):
+        kv = KVSlotManager(num_slots=4, max_seq=64, capacity_tokens=100,
+                           page_size=8)
+        assert kv.paged
+        assert kv.total_pages == 13            # ceil(100 / 8)
+        assert kv.pages_for(0) == 0
+        assert kv.pages_for(1) == 1
+        assert kv.pages_for(8) == 1
+        assert kv.pages_for(9) == 2
+
+    def test_block_table_tracks_growth(self):
+        kv = KVSlotManager(num_slots=2, max_seq=64, capacity_tokens=128,
+                           page_size=8)
+        r = mk_req(0, 10)
+        kv.allocate(r)
+        assert len(kv.block_table[0]) == 2     # ceil(10/8)
+        for _ in range(6):                     # 10 -> 16: still 2 pages
+            kv.grow(r)
+        assert len(kv.block_table[0]) == 2
+        kv.grow(r)                             # 17: crosses the boundary
+        assert len(kv.block_table[0]) == 3
+        assert kv.pages_used == 3
+
+    def test_release_recycles_pages(self):
+        kv = KVSlotManager(num_slots=2, max_seq=64, capacity_tokens=64,
+                           page_size=8)
+        r0 = mk_req(0, 20)
+        kv.allocate(r0)
+        held_pages = list(kv.block_table[0])
+        kv.release(r0)
+        assert kv.pages_used == 0
+        assert 0 not in kv.block_table
+        r1 = mk_req(1, 20)
+        kv.allocate(r1)
+        # LIFO pool: the freshly freed pages are reused
+        assert set(kv.block_table[1]) == set(held_pages)
+
+    def test_evict_tail_frees_partial_pages(self):
+        kv = KVSlotManager(num_slots=2, max_seq=64, capacity_tokens=64,
+                           page_size=8)
+        r = mk_req(0, 37)
+        kv.allocate(r)
+        assert kv.pages_used == 5              # ceil(37/8)
+        freed = kv.evict_tail(r, 20)
+        assert freed == 2                      # 5 -> ceil(20/8) = 3
+        assert kv.pages_used == 3
+        assert kv.tokens_used == 20
+        assert kv.held_tokens[0] == 20
+        # shrinking below is a no-op when already at/below target
+        assert kv.evict_tail(r, 20) == 0
+        kv.release(r)
+        assert kv.pages_used == 0
+        assert kv.tokens_used == 0
+
+    def test_fragmentation_aware_admission(self):
+        """Partially-filled last pages consume whole pages: the page
+        check can refuse what the raw token check would admit."""
+        kv = KVSlotManager(num_slots=4, max_seq=32, capacity_tokens=32,
+                           page_size=8)
+        kv.allocate(mk_req(0, 9))              # 2 pages (1 token spills)
+        kv.allocate(mk_req(1, 9))              # 2 pages
+        assert kv.tokens_used == 18
+        assert kv.pages_used == 4              # pool exhausted
+        cand = mk_req(2, 8)
+        assert kv.tokens_used + 8 <= kv.capacity_tokens   # tokens would fit
+        assert not kv.can_allocate(cand)                  # pages do not
+
+    def test_overdraft_is_visible_not_corrupting(self):
+        """Like the token ledger, the pool tolerates transient overdraft
+        with page_utilization > 1 as the signal; release restores."""
+        kv = KVSlotManager(num_slots=4, max_seq=32, capacity_tokens=16,
+                           page_size=8)
+        r0, r1 = mk_req(0, 16), mk_req(1, 16)
+        kv.allocate(r0)
+        kv.allocate(r1)                        # forced past the pool
+        assert kv.pages_used == 4 > kv.total_pages == 2
+        assert kv.page_utilization > 1.0
+        assert all(p >= kv.total_pages for p in kv.block_table[1])
+        kv.release(r1)
+        kv.release(r0)
+        assert kv.pages_used == 0
+        assert sorted(kv.free_pages) == [0, 1]
+
+    def test_page_size_max_seq_is_legacy_path(self):
+        kv = KVSlotManager(num_slots=4, max_seq=64, capacity_tokens=256,
+                           page_size=64)
+        assert not kv.paged
+        assert kv.total_pages == kv.num_slots
+        r = mk_req(0, 30)
+        kv.allocate(r)
+        assert kv.block_table == {}            # no page machinery engaged
+        occ = kv.occupancy()
+        assert occ["paged"] is False
+        assert occ["page_size"] == 0
+        assert occ["pages_used"] == 0
+
+    def test_swap_roundtrip_preserves_pages(self):
+        kv = KVSlotManager(num_slots=2, max_seq=64, capacity_tokens=64,
+                           page_size=8)
+        r = mk_req(0, 20)
+        kv.allocate(r)
+        kv.swap_out(r, {"k": np.zeros(16, np.uint8)})
+        assert kv.pages_used == 0
+        assert kv.tokens_used == 0
+        sl = kv.swap_in(r)
+        assert sl is not None
+        kv.allocate(r)                         # engine re-allocates on swap-in
+        assert kv.pages_used == 3
+        assert kv.tokens_used == 20
+
+
+# --------------------------------------------------------------------------
+# scheduler capacity view
+# --------------------------------------------------------------------------
+class TestPagedWeights:
+    def test_kv_weight_rounds_to_pages(self):
+        lat = LatencyModel(get_smoke_config("llama3-8b"), TPU_V5E)
+        sched = Scheduler(1024, lat, SchedulerConfig(page_size=16))
+        r = mk_req(0, 17)
+        r.generated = 0
+        assert sched._kv_weight(r) == 32       # ceil(17/16) * 16
+        sched_tok = Scheduler(1024, lat, SchedulerConfig())
+        assert sched_tok._kv_weight(r) == 17   # page_size=0: legacy integer
+
+    def test_pack_in_order_uses_page_weights(self):
+        lat = LatencyModel(get_smoke_config("llama3-8b"), TPU_V5E)
+        sched = Scheduler(64, lat, SchedulerConfig(page_size=16))
+        reqs = [mk_req(i, 17) for i in range(3)]   # 32 pages-weight each
+        kept = sched._pack_in_order(reqs)
+        assert len(kept) == 2                  # 3 * 17 = 51 < 64, but 3 * 32 > 64
+
+
+# --------------------------------------------------------------------------
+# engine differential oracles
+# --------------------------------------------------------------------------
+def _mk_workload(cfg, n, rng, out_len=12, stagger=0.05):
+    wl = []
+    for i in range(n):
+        plen = int(rng.integers(5, 30))
+        wl.append(Request(
+            rid=i, arrival=i * stagger, prompt_len=plen, output_len=out_len,
+            spec=QoESpec(ttft=1.0, tds=4.8),
+            prompt_tokens=rng.integers(0, cfg.vocab_size, plen)))
+    return wl
+
+
+@pytest.fixture(scope="module")
+def llama():
+    cfg = get_smoke_config("llama3-8b")
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+def _run(cfg, m, params, wl, **kw):
+    lat = LatencyModel(cfg, TPU_V5E)
+    sched = make_scheduler(
+        "andes", kw.get("capacity_tokens", 4 * 64), lat,
+        SchedulerConfig(delta_t=kw.pop("delta_t", 50.0)))
+    eng = ServingEngine(m, params, sched, lat, num_slots=kw.pop("num_slots", 4),
+                        max_seq=64, **kw)
+    out = eng.run([r.clone() for r in wl], max_iterations=4000)
+    return out, eng
+
+
+@pytest.mark.parametrize("page_size", [1, 64])
+def test_engine_page_differential_uncontended(llama, page_size):
+    """page_size=1 (page check == token check) and page_size=max_seq
+    (legacy path) must reproduce the default engine bit-for-bit."""
+    cfg, m, params = llama
+    rng = np.random.default_rng(0)
+    wl = _mk_workload(cfg, 6, rng)
+    base, _ = _run(cfg, m, params, wl)
+    paged, eng = _run(cfg, m, params, wl, page_size=page_size)
+    assert eng.kv.paged == (page_size == 1)
+    assert fingerprint(paged) == fingerprint(base)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mode", ["swap", "recompute"])
+def test_engine_page_differential_contended(llama, mode):
+    """Bit-for-bit under preemption pressure in BOTH modes: the paged
+    accounting must not shift a single scheduling or preemption decision
+    when page granularity is the token (page_size=1)."""
+    cfg, m, params = llama
+    rng = np.random.default_rng(1)
+    wl = _mk_workload(cfg, 8, rng, out_len=15, stagger=0.01)
+    base, eng_b = _run(cfg, m, params, wl, num_slots=2, capacity_tokens=100,
+                       preemption_mode=mode, delta_t=5.0)
+    assert eng_b.preemptions > 0, "test requires contention"
+    paged, eng_p = _run(cfg, m, params, wl, num_slots=2, capacity_tokens=100,
+                        preemption_mode=mode, delta_t=5.0, page_size=1)
+    assert eng_p.preemptions == eng_b.preemptions
+    assert fingerprint(paged) == fingerprint(base)
+
+
+def test_engine_wires_page_size_into_scheduler(llama):
+    cfg, m, params = llama
+    lat = LatencyModel(cfg, TPU_V5E)
+    sched = make_scheduler("andes", 256, lat, SchedulerConfig())
+    eng = ServingEngine(m, params, sched, lat, num_slots=4, max_seq=64,
+                        capacity_tokens=256, page_size=16)
+    assert eng.kv.paged
+    assert sched.cfg.page_size == 16
