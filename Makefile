@@ -4,7 +4,9 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 .PHONY: test test-fast test-slow bench bench-api bench-arena \
         bench-arena-smoke bench-cluster bench-cluster-engine \
         bench-hotpath bench-obs bench-scale bench-scale-smoke bench-spec \
-        example-quickstart example-cluster example-cluster-engine
+        bench-server bench-server-smoke serve server-smoke \
+        example-quickstart example-cluster example-cluster-engine \
+        example-serve-http
 
 # ---- test tiers -----------------------------------------------------------
 # tier-1  (make test-fast): everything NOT marked `slow` — the ROADMAP.md
@@ -79,8 +81,32 @@ bench-arena:
 bench-arena-smoke:
 	$(PYTHON) -m benchmarks.policy_arena --smoke
 
+# wire-serving benchmark (PR 9): wall-clock HTTP/SSE frontend under
+# concurrent streams; gates wire==engine frame fidelity and the
+# wall-vs-virtual tolerance differential; writes BENCH_server.json
+bench-server:
+	$(PYTHON) -m benchmarks.server_bench
+
+# CI-sized wire bench: one 8-stream wave, gates only, no artifact write
+bench-server-smoke:
+	$(PYTHON) -m benchmarks.server_bench --smoke
+
+# run the HTTP/SSE frontend standalone (prints "LISTENING <port>";
+# SIGTERM/ctrl-C drains live streams before exiting)
+serve:
+	$(PYTHON) -m repro.server --port 8080
+
+# the CI server smoke: boots `python -m repro.server` as a subprocess and
+# asserts SSE framing, token identity + tolerance gates vs a
+# virtual-clock reference, /metrics, and SIGTERM graceful drain
+server-smoke:
+	$(PYTHON) scripts/server_smoke.py
+
 example-quickstart:
 	$(PYTHON) examples/quickstart.py
+
+example-serve-http:
+	$(PYTHON) examples/serve_http.py
 
 example-cluster:
 	$(PYTHON) examples/serve_cluster.py

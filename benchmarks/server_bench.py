@@ -1,0 +1,150 @@
+"""Wire-serving benchmark: what the HTTP/SSE frontend costs (PR 9).
+
+Runs an in-process wall-clock ServingServer (the same smoke engine the
+standalone `python -m repro.server` boots) under waves of concurrent SSE
+streams and measures the wire path end to end:
+
+  * wall tokens/s delivered over the socket (all waves),
+  * mean/p95 TTFT and mean QoE as the *client* reconstructs them from
+    SSE frames — cross-checked against the engine's own request records
+    (the wire must report what the engine did, exactly),
+  * the wall-vs-virtual tolerance differential (serving.tolerance) for
+    the full population — the same gate the CI smoke job runs per-PR,
+    here recorded as a diffable artifact,
+  * SSE flush volume (events, bytes) from the server's MetricsRegistry.
+
+Writes ``BENCH_server.json`` at the repo root (like BENCH_hotpath.json —
+diffable PR over PR). ``--smoke`` runs one small wave and skips the
+artifact write (the CI-friendly variant).
+
+Run:  PYTHONPATH=src python benchmarks/server_bench.py [--smoke]
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+import pathlib
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core import QoESpec                                  # noqa: E402
+from repro.core.request import ReqState, Request                # noqa: E402
+from repro.serving import (Tolerance, ToleranceSpec,            # noqa: E402
+                           compare_requests)
+from repro.server import (ServerConfig, ServingServer, astream,  # noqa: E402
+                          build_engine)
+
+OUT_JSON = pathlib.Path(__file__).resolve().parents[1] / "BENCH_server.json"
+SPEC = QoESpec(ttft=1.0, tds=4.8)
+PROMPT_LEN = 9
+GATES = ToleranceSpec(
+    ttft_mean_diff=Tolerance(abs_tol=0.5),
+    ttft_p95_diff=Tolerance(abs_tol=1.0),
+    ttft_max_diff=Tolerance(abs_tol=2.0),
+    tds_mean_diff=Tolerance(abs_tol=2.0, rel_tol=0.5),
+    qoe_mean_diff=Tolerance(abs_tol=0.30),
+    qoe_max_diff=Tolerance(abs_tol=0.60),
+    qoe_mean_of=Tolerance(abs_tol=0.30),
+)
+
+
+def _prompt(rid: int):
+    return np.random.default_rng((7, rid)).integers(
+        0, 1 << 14, PROMPT_LEN).tolist()
+
+
+def _as_request(rid: int, out_len: int, evs) -> Request:
+    acc = next(d for k, d in evs if k == "accepted")
+    toks = [d for k, d in evs if k == "token"]
+    r = Request(rid=rid, arrival=float(acc["arrival"]),
+                prompt_len=PROMPT_LEN, output_len=out_len, spec=SPEC)
+    r.emit_times = [float(d["t"]) for d in toks]
+    r.output_tokens = [int(d["token"]) for d in toks]
+    r.generated = len(toks)
+    r.state = ReqState.FINISHED
+    return r
+
+
+def run(waves: int = 3, concurrency: int = 8, out_len: int = 12) -> dict:
+    srv = ServingServer(ServerConfig(clock="wall", warmup=True))
+    port = srv.start()
+    cand = []
+    t0 = time.monotonic()
+    try:
+        rid = 0
+        for _ in range(waves):
+            rids = list(range(rid, rid + concurrency))
+            rid += concurrency
+
+            async def wave():
+                return await asyncio.gather(*[
+                    astream("127.0.0.1", port,
+                            {"prompt_tokens": _prompt(i),
+                             "max_tokens": out_len, "rid": i})
+                    for i in rids])
+
+            for i, evs in zip(rids, asyncio.run(wave())):
+                cand.append(_as_request(i, out_len, evs))
+        elapsed = time.monotonic() - t0
+        reg = srv.registry
+        sse_events = reg.value("sse_events_flushed_total")
+        sse_bytes = reg.value("sse_bytes_flushed_total")
+    finally:
+        srv.shutdown(drain=False)
+
+    # the wire must report what the engine did — frame-for-frame
+    eng_by = {r.rid: r for r in srv.backend.seen if r.rid >= 0}
+    wire_exact = all(
+        c.output_tokens == list(eng_by[c.rid].output_tokens)
+        and np.allclose(c.emit_times, eng_by[c.rid].emit_times)
+        for c in cand)
+
+    # wall-vs-virtual tolerance differential on the whole population
+    cfg, ref_eng = build_engine(ServerConfig(clock="virtual"))
+    ref = [Request(rid=c.rid, arrival=c.arrival, prompt_len=PROMPT_LEN,
+                   output_len=out_len, spec=SPEC,
+                   prompt_tokens=np.asarray(_prompt(c.rid), np.int32))
+           for c in cand]
+    ref_eng.run(ref, max_iterations=20_000)
+    rep = compare_requests(ref, cand, GATES)
+
+    n_tokens = sum(r.generated for r in cand)
+    ttfts = np.array([r.final_ttft() for r in cand])
+    return {
+        "n_requests": len(cand),
+        "waves": waves,
+        "concurrency": concurrency,
+        "out_len": out_len,
+        "wall_seconds": round(elapsed, 3),
+        "wire_tokens_per_s": round(n_tokens / elapsed, 1),
+        "ttft_mean_s": round(float(ttfts.mean()), 4),
+        "ttft_p95_s": round(float(np.percentile(ttfts, 95)), 4),
+        "qoe_mean": round(float(np.mean([r.final_qoe() for r in cand])), 4),
+        "sse_events_flushed": int(sse_events),
+        "sse_bytes_flushed": int(sse_bytes),
+        "wire_matches_engine": bool(wire_exact),
+        "tolerance_ok": bool(rep.ok),
+        "tolerance_gates": {g.name: round(g.cand, 6) for g in rep.gates},
+    }
+
+
+def main() -> None:
+    smoke = "--smoke" in sys.argv[1:]
+    report = run(waves=1 if smoke else 3, concurrency=8,
+                 out_len=8 if smoke else 12)
+    print(json.dumps(report, indent=2))
+    if not report["wire_matches_engine"]:
+        raise SystemExit("SSE stream diverged from engine records")
+    if not report["tolerance_ok"]:
+        raise SystemExit("wall-vs-virtual tolerance gates failed")
+    if not smoke:
+        OUT_JSON.write_text(json.dumps(report, indent=2) + "\n")
+        print(f"wrote {OUT_JSON.name}")
+
+
+if __name__ == "__main__":
+    main()

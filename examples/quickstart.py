@@ -29,6 +29,22 @@ drives the same backends; step 6 runs a two-policy head-to-head on a
 synchronized-burst adversarial trace and scores it with the arena's
 fairness/goodput report (the full sweep is `make bench-arena`).
 
+A fourth thread (PR 9): the same stack over an actual wire. `make
+serve` boots an HTTP/SSE frontend (`python -m repro.server`) whose
+`POST /v1/stream` maps this example's StreamHandle lifecycle 1:1 onto
+server-sent events, paced in real time by a `clock="wall"` engine:
+
+    $ PYTHONPATH=src python -m repro.server --port 8080 &
+    $ curl -N -X POST http://127.0.0.1:8080/v1/stream \
+           -d '{"prompt_len": 8, "max_tokens": 6}'
+    $ curl http://127.0.0.1:8080/metrics | head   # live Prometheus text
+    $ kill -TERM %1                               # graceful drain
+
+See examples/serve_http.py for the full walkthrough (network-degraded
+§5 pacing, metrics, drain; artifacts under out/) and
+`serving/tolerance.py` for how wall-clock runs are verified against the
+virtual-clock reference used here.
+
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import json

@@ -1,0 +1,197 @@
+#!/usr/bin/env python
+"""CI server smoke: the ISSUE 9 acceptance criteria, over a real socket.
+
+Boots `python -m repro.server` (wall-clock engine) as a subprocess, then
+asserts, end to end:
+
+  1. N >= 8 concurrent SSE streams complete with well-formed framing
+     (accepted -> token* -> finish) over localhost.
+  2. Token text is IDENTICAL to a virtual-clock reference engine run fed
+     the same prompts at the same arrivals (hard gate).
+  3. Wall-clock TTFT/TDS/QoE distributions agree with the reference
+     within the CI-generous tolerance gates (serving.tolerance).
+  4. GET /metrics parses as Prometheus text and reflects the traffic.
+  5. SIGTERM mid-stream drains gracefully: live streams still finish
+     cleanly, the process prints "DRAINED done" and exits 0.
+
+Run:  PYTHONPATH=src python scripts/server_smoke.py
+(The Makefile `server-smoke` target and the CI server-smoke job wrap
+this in a timeout.)
+"""
+import asyncio
+import os
+import pathlib
+import signal
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core import QoESpec                                  # noqa: E402
+from repro.core.request import ReqState, Request                # noqa: E402
+from repro.obs.metrics import parse_prometheus                  # noqa: E402
+from repro.serving import (Tolerance, ToleranceSpec,            # noqa: E402
+                           compare_requests)
+from repro.server import (ServerConfig, astream, build_engine,  # noqa: E402
+                          fetch, stream)
+
+N_CONCURRENT = 8
+OUT_LEN = 12
+PROMPT_LEN = 9
+SPEC = QoESpec(ttft=1.0, tds=4.8)
+# same CI-generous gates as tests/test_tolerance.py's in-process
+# differential: wide enough for shared-runner sleep jitter, tight enough
+# to catch a host that cannot keep the smoke-model schedule at all
+GATES = ToleranceSpec(
+    ttft_mean_diff=Tolerance(abs_tol=0.5),
+    ttft_p95_diff=Tolerance(abs_tol=1.0),
+    ttft_max_diff=Tolerance(abs_tol=2.0),
+    tds_mean_diff=Tolerance(abs_tol=2.0, rel_tol=0.5),
+    qoe_mean_diff=Tolerance(abs_tol=0.30),
+    qoe_max_diff=Tolerance(abs_tol=0.60),
+    qoe_mean_of=Tolerance(abs_tol=0.30),
+)
+
+
+def start_server():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.server", "--port", "0"],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True, env=env)
+    lines = []
+    port_box = {}
+    ready = threading.Event()
+
+    def reader():
+        for line in proc.stdout:
+            print(f"[server] {line.rstrip()}", flush=True)
+            lines.append(line)
+            if line.startswith("LISTENING"):
+                port_box["port"] = int(line.split()[1])
+                ready.set()
+        ready.set()
+
+    threading.Thread(target=reader, daemon=True).start()
+    if not ready.wait(timeout=300) or "port" not in port_box:
+        proc.kill()
+        raise SystemExit("server never printed LISTENING")
+    return proc, port_box["port"], lines
+
+
+def prompts_for(rids):
+    return {rid: np.random.default_rng((7, rid)).integers(
+        0, 1 << 14, PROMPT_LEN).tolist() for rid in rids}
+
+
+def as_request(rid, prompt_len, evs):
+    acc = next(d for k, d in evs if k == "accepted")
+    toks = [d for k, d in evs if k == "token"]
+    r = Request(rid=rid, arrival=float(acc["arrival"]),
+                prompt_len=prompt_len, output_len=OUT_LEN, spec=SPEC)
+    r.emit_times = [float(d["t"]) for d in toks]
+    r.output_tokens = [int(d["token"]) for d in toks]
+    r.generated = len(toks)
+    r.state = ReqState.FINISHED
+    return r
+
+
+def differential_round(port):
+    rids = list(range(N_CONCURRENT))
+    prompts = prompts_for(rids)
+
+    async def fan_out():
+        return await asyncio.gather(*[
+            astream("127.0.0.1", port,
+                    {"prompt_tokens": prompts[rid], "max_tokens": OUT_LEN,
+                     "rid": rid})
+            for rid in rids])
+
+    results = asyncio.run(fan_out())
+    cand = []
+    for rid, evs in zip(rids, results):
+        kinds = [k for k, _ in evs]
+        assert kinds[0] == "accepted", kinds
+        assert kinds[-1] == "finish", kinds
+        assert kinds.count("token") == OUT_LEN, kinds
+        cand.append(as_request(rid, PROMPT_LEN, evs))
+    print(f"streamed {len(cand)} concurrent SSE responses")
+
+    # virtual-clock reference: identical engine build, identical prompts,
+    # the server's actual arrival stamps
+    cfg, ref_eng = build_engine(ServerConfig(clock="virtual"))
+    ref = [Request(rid=r.rid, arrival=r.arrival, prompt_len=PROMPT_LEN,
+                   output_len=OUT_LEN, spec=SPEC,
+                   prompt_tokens=np.asarray(prompts[r.rid], np.int32))
+           for r in cand]
+    ref_eng.run(ref, max_iterations=4000)
+    rep = compare_requests(ref, cand, GATES)
+    print(rep.summary())
+    rep.assert_ok()
+
+
+def metrics_round(port):
+    status, text = fetch("127.0.0.1", port, "/metrics")
+    assert status == 200, status
+    parsed = parse_prometheus(text)
+    n = parsed[("requests_submitted_total", ())]
+    assert n >= N_CONCURRENT, n
+    assert parsed[("sse_events_flushed_total", ())] > 0
+    print(f"/metrics parses: {len(parsed)} samples, "
+          f"{int(n)} requests submitted")
+
+
+def drain_round(proc, port):
+    """SIGTERM with live streams: every stream must still finish."""
+    results = {}
+    barrier = threading.Barrier(N_CONCURRENT + 1)
+
+    def client(i):
+        evs = []
+        for ev in stream("127.0.0.1", port,
+                         {"prompt_len": 6, "max_tokens": 24,
+                          "rid": 100 + i}):
+            evs.append(ev)
+            if ev[0] == "accepted":
+                barrier.wait(timeout=60)
+        results[i] = evs
+
+    threads = [threading.Thread(target=client, args=(i,))
+               for i in range(N_CONCURRENT)]
+    for t in threads:
+        t.start()
+    barrier.wait(timeout=60)             # all N streams admitted and live
+    proc.send_signal(signal.SIGTERM)
+    for t in threads:
+        t.join(timeout=120)
+    for i, evs in sorted(results.items()):
+        kinds = [k for k, _ in evs]
+        assert kinds[-1] == "finish", (i, kinds)
+        assert kinds.count("token") == 24, (i, kinds)
+    print(f"drained {len(results)} live streams cleanly after SIGTERM")
+
+
+def main():
+    proc, port, lines = start_server()
+    try:
+        st, _ = fetch("127.0.0.1", port, "/healthz")
+        assert st == 200
+        differential_round(port)
+        metrics_round(port)
+        drain_round(proc, port)
+        code = proc.wait(timeout=60)
+        assert code == 0, f"server exited {code}"
+        assert any("DRAINED done" in ln for ln in lines), lines[-3:]
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+    print("OK: server smoke passed (SSE framing, token identity, "
+          "tolerance gates, /metrics, graceful drain)")
+
+
+if __name__ == "__main__":
+    main()

@@ -74,7 +74,7 @@ class SubmitOptions:
 class _ClientObserver(Observer):
     """Fans backend lifecycle hooks out to the client's StreamHandles.
 
-    Only the five stream-visible kinds are forwarded; every other hook
+    Only the stream-visible kinds are forwarded; every other hook
     inherits the null base. Handles are looked up by object identity, so
     a backend shared with other submitters never cross-talks."""
 
@@ -100,6 +100,9 @@ class _ClientObserver(Observer):
 
     def defer(self, req, t, *, replica=-1):
         self._fwd("defer", req, t)
+
+    def cancel(self, req, t, *, replica=-1):
+        self._fwd("cancel", req, t)
 
 
 class ServingClient:
@@ -189,6 +192,17 @@ class ServingClient:
         self._rids.add(req.rid)
         self.backend.submit(req)
         return h
+
+    def cancel(self, handle_or_rid) -> bool:
+        """Abort a submitted stream (a StreamHandle or its rid). Only
+        meaningful on backends exposing `cancel(rid)` (ServingSimulator /
+        ServingEngine); returns False when unsupported, unknown, or the
+        request already finished."""
+        rid = getattr(handle_or_rid, "rid", handle_or_rid)
+        backend_cancel = getattr(self.backend, "cancel", None)
+        if backend_cancel is None:
+            return False
+        return bool(backend_cancel(int(rid)))
 
     # -------------------------------------------------------------- driving
     def step(self, until: Optional[float] = None) -> bool:

@@ -70,6 +70,7 @@ class StreamHandle:
         self.on_emit: Optional[EmitCallback] = None
         self.on_preempt: Optional[Callback] = None
         self.on_finish: Optional[Callback] = None
+        self.on_cancel: Optional[Callback] = None
 
     # ------------------------------------------------------------ identity
     @property
@@ -79,6 +80,11 @@ class StreamHandle:
     @property
     def finished(self) -> bool:
         return self.request.state == ReqState.FINISHED
+
+    @property
+    def cancelled(self) -> bool:
+        """Aborted by the client (disconnect / ServingClient.cancel)."""
+        return self.request.cancelled
 
     @property
     def done(self) -> bool:
@@ -104,6 +110,9 @@ class StreamHandle:
             self.shed = True
         elif kind == "defer":
             self.deferrals += 1
+        elif kind == "cancel":
+            if self.on_cancel is not None:
+                self.on_cancel(self, t)
 
     # ------------------------------------------------------------ iteration
     def __iter__(self) -> "StreamHandle":

@@ -51,6 +51,13 @@ from repro.core.scoring import (
     per_tenant_service,
     slo_goodput,
 )
+from repro.core.network import (
+    NETWORK_SCENARIOS,
+    JitterLossLink,
+    NetworkModel,
+    make_network,
+    qoe_under_network,
+)
 from repro.core.token_buffer import TokenBuffer
 
 __all__ = [
@@ -66,6 +73,8 @@ __all__ = [
     "jains_index", "slo_goodput", "per_tenant_service", "max_min_service",
     "fairness_report",
     "TokenBuffer",
+    "NetworkModel", "JitterLossLink", "NETWORK_SCENARIOS", "make_network",
+    "qoe_under_network",
     "QoEPricer", "SLOContract", "placement_gain", "request_weight",
     "shared_token_rate", "slo_attained", "weighted_attainment",
 ]

@@ -33,17 +33,24 @@ class QoESpec:
 # Exact (reporting) path
 # ---------------------------------------------------------------------------
 
-def pace_delivery(emit_times: np.ndarray, tds: float) -> np.ndarray:
+def pace_delivery(emit_times: np.ndarray, tds: float,
+                  network=None) -> np.ndarray:
     """Client-side token buffer (paper §5, Fig. 8).
 
     Token i becomes *visible* at d_i = max(e_i, d_{i-1} + 1/tds): the buffer
     withholds tokens arriving faster than the user's digest speed and
     releases them at exactly the expected TDS; the first token is shown as
     soon as it arrives.
+
+    `network` (a repro.core.network.NetworkModel, optional) transits the
+    server emission timeline through a delay/jitter/loss link first, so the
+    buffer paces what actually *arrives* at the client.
     """
     e = np.asarray(emit_times, dtype=np.float64)
     if e.size == 0:
         return e
+    if network is not None:
+        e = network.arrivals(e)
     gap = 1.0 / tds
     d = np.empty_like(e)
     d[0] = e[0]

@@ -48,6 +48,9 @@ class Request:
     prefilled: bool = False      # KV/state for the prompt exists somewhere
     finish_time: float = float("nan")
     output_tokens: List[int] = dataclasses.field(default_factory=list)
+    cancelled: bool = False      # aborted by the client (server disconnect /
+                                 # explicit cancel) — FINISHED early, partial
+                                 # output; QoE reporting should exclude these
 
     def clone(self) -> "Request":
         """A fresh, unserved copy: identity fields (rid/arrival/lengths/

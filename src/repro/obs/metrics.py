@@ -378,6 +378,9 @@ class MetricsObserver(Observer):
         self._prefill_n = 0
         self._chunks_n = 0
         self._swapins_n = 0
+        self._cancelled_n = 0
+        self._sse_events_n = 0
+        self._sse_bytes_n = 0
         r.counter("requests_submitted_total",
                   "requests that entered the system"
                   ).set_fn(lambda: float(self._submitted_n))
@@ -402,6 +405,21 @@ class MetricsObserver(Observer):
                   ).set_fn(lambda: float(self._chunks_n))
         r.counter("swap_ins_total", "swapped requests restored to device"
                   ).set_fn(lambda: float(self._swapins_n))
+        r.counter("requests_cancelled_total",
+                  "requests aborted by clients (disconnect / cancel)"
+                  ).set_fn(lambda: float(self._cancelled_n))
+        r.counter("sse_events_flushed_total",
+                  "server-sent events written to client sockets"
+                  ).set_fn(lambda: float(self._sse_events_n))
+        r.counter("sse_bytes_flushed_total",
+                  "SSE bytes written to client sockets"
+                  ).set_fn(lambda: float(self._sse_bytes_n))
+        self._conns = r.counter(
+            "connection_events_total", "server connection lifecycle events",
+            ("event",))
+        self._drains = r.counter(
+            "drain_events_total", "graceful-shutdown drain phases",
+            ("phase",))
         self._preempts = r.counter(
             "preemptions_total", "batch evictions by mode", ("mode",))
         self._sched = r.counter(
@@ -508,6 +526,11 @@ class MetricsObserver(Observer):
         self._deferred_n += 1
         self._tick(t)
 
+    def cancel(self, req, t, *, replica=-1):
+        self._cancelled_n += 1
+        self._live_n -= 1 if req.fluid_idx >= 0 else 0  # admitted only
+        self._tick(t)
+
     # ------------------------------------------------------------ scheduler
     def schedule(self, t, info, *, replica=-1):
         self._sched.inc(policy=str(info.get("policy", "?")),
@@ -525,6 +548,20 @@ class MetricsObserver(Observer):
 
     def scale(self, t, action, replica_id, signal=None, *, replica=-1):
         self._scales.inc(action=str(action))
+        self._tick(t)
+
+    # --------------------------------------------------------- wire / server
+    def connection(self, t, conn_id, event, info=None, *, replica=-1):
+        self._conns.inc(event=str(event))
+        self._tick(t)
+
+    def sse_flush(self, t, conn_id, rid, n_events, n_bytes, *, replica=-1):
+        self._sse_events_n += n_events
+        self._sse_bytes_n += n_bytes
+        self._tick(t)
+
+    def drain(self, t, phase, conns, live, *, replica=-1):
+        self._drains.inc(phase=str(phase))
         self._tick(t)
 
 

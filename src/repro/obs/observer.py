@@ -9,11 +9,13 @@ sites cost exactly one `is not None` test when observability is off.
 Hook taxonomy (all timestamps are virtual-clock seconds):
 
   request lifecycle   submit admit prefill emit preempt swap_in finish
-                      shed defer
+                      shed defer cancel
   scheduler           schedule (decision payload: pricing inputs, victim
                       set), multi_step (idle_steps certificate j)
   fleet               route admission scale
   hot path            sync dispatch jit_compile spec
+  wire / server       connection sse_flush drain (repro.server; `t` is the
+                      serving clock — wall seconds for a wall engine)
 
 Every hook takes a keyword-only ``replica`` (default -1 = "not a cluster
 replica" / fleet-level). `ScopedObserver` stamps it so one observer
@@ -78,6 +80,10 @@ class Observer:
     def defer(self, req, t, *, replica=-1):
         """Admission control pushed the request back into the queue."""
 
+    def cancel(self, req, t, *, replica=-1):
+        """Request aborted by the client (disconnect / explicit cancel)
+        before completing; `req.generated` tokens had been emitted."""
+
     # ---- scheduler ---------------------------------------------------------
     def schedule(self, t, info, *, replica=-1):
         """One scheduler decision. `info` is a JSON-able dict: policy,
@@ -117,6 +123,24 @@ class Observer:
         """One speculative iteration: drafted `proposed`, accepted
         `accepted` tokens (acceptance rate = accepted/proposed)."""
 
+    # ---- wire / server (repro.server) --------------------------------------
+    # `t` on these hooks is the *serving* clock (wall seconds since server
+    # start for a wall-clock engine) and `conn_id` a server-unique integer
+    # per accepted TCP connection.
+    def connection(self, t, conn_id, event, info=None, *, replica=-1):
+        """Connection lifecycle: event in {"open","request","close",
+        "disconnect","reject"}; `info` is a small JSON-able dict (peer,
+        path, rid, ...) when available."""
+
+    def sse_flush(self, t, conn_id, rid, n_events, n_bytes, *, replica=-1):
+        """`n_events` server-sent events (`n_bytes` on the wire) flushed
+        to connection `conn_id` for request `rid`."""
+
+    def drain(self, t, phase, conns, live, *, replica=-1):
+        """Graceful-shutdown progress: phase in {"begin","waiting",
+        "done","timeout"} with `conns` open connections and `live`
+        unfinished requests remaining."""
+
 
 #: Every hook name, in canonical order. MultiObserver / ScopedObserver
 #: forwarders are generated from this list so new hooks only need a
@@ -124,10 +148,11 @@ class Observer:
 HOOK_NAMES = (
     "submit", "admit", "prefill", "prefill_chunk", "emit", "preempt",
     "swap_in", "finish",
-    "shed", "defer",
+    "shed", "defer", "cancel",
     "schedule", "multi_step",
     "route", "admission", "scale",
     "sync", "dispatch", "jit_compile", "spec",
+    "connection", "sse_flush", "drain",
 )
 
 

@@ -155,6 +155,10 @@ class TraceRecorder(Observer):
     def defer(self, req, t, *, replica=-1):
         self._rec("defer", t, req.rid, replica)
 
+    def cancel(self, req, t, *, replica=-1):
+        self._rec("cancel", t, req.rid, replica,
+                  generated=int(req.generated))
+
     # ------------------------------------------------------------- scheduler
     def schedule(self, t, info, *, replica=-1):
         self._rec("schedule", t, None, replica, **info)
@@ -197,6 +201,19 @@ class TraceRecorder(Observer):
     def spec(self, t, proposed, accepted, *, replica=-1):
         self._rec("spec", t, None, replica, proposed=int(proposed),
                   accepted=int(accepted))
+
+    # --------------------------------------------------------- wire / server
+    def connection(self, t, conn_id, event, info=None, *, replica=-1):
+        self._rec("connection", t, None, replica, conn_id=int(conn_id),
+                  event=event, info=info)
+
+    def sse_flush(self, t, conn_id, rid, n_events, n_bytes, *, replica=-1):
+        self._rec("sse_flush", t, rid, replica, conn_id=int(conn_id),
+                  n_events=int(n_events), n_bytes=int(n_bytes))
+
+    def drain(self, t, phase, conns, live, *, replica=-1):
+        self._rec("drain", t, None, replica, phase=phase,
+                  conns=int(conns), live=int(live))
 
     # --------------------------------------------------------------- exports
     def to_jsonl(self) -> str:
@@ -264,6 +281,17 @@ class TraceRecorder(Observer):
             json.dump(self.to_chrome_trace(), f)
 
 
+def merge_traces(*event_lists: List[TraceEvent]) -> List[TraceEvent]:
+    """Merge per-source traces (replicas, server connections, pump vs.
+    loop thread) into one timestamp-sorted stream. The sort is stable, so
+    equal-timestamp events keep their per-source relative order."""
+    merged: List[TraceEvent] = []
+    for evs in event_lists:
+        merged.extend(evs)
+    merged.sort(key=lambda e: e.t)
+    return merged
+
+
 def qoe_from_trace(events: List[TraceEvent]) -> Dict[int, float]:
     """Recompute per-request QoE purely from a trace.
 
@@ -271,13 +299,23 @@ def qoe_from_trace(events: List[TraceEvent]) -> Dict[int, float]:
     timestamps) events, pushed through the same `qoe_exact` as
     `Request.final_qoe()`. Because emit events carry the identical
     floats the backend appended to `emit_times`, the result matches the
-    backend-reported QoE exactly — the trace-reconciliation oracle."""
+    backend-reported QoE exactly — the trace-reconciliation oracle.
+
+    Robust to event *file order*: wall-clock runs interleave replicas and
+    server connections, so a merged trace may deliver a request's events
+    out of order (and a fleet hand-off records two "arrival" events whose
+    order depends on the writer). The reconstruction is therefore
+    permutation-invariant — the earliest-timestamp arrival wins and each
+    request's emit timeline is sorted before pacing — because
+    `pace_delivery` is order-sensitive: feeding it an unsorted timeline
+    silently computes a different (wrong) delivery curve."""
     specs: Dict[int, tuple] = {}
     emits: Dict[int, List[float]] = {}
     for ev in events:
-        if ev.kind == "arrival" and ev.rid not in specs:
-            specs[ev.rid] = (ev.t, QoESpec(ttft=ev.data["ttft"],
-                                           tds=ev.data["tds"]))
+        if ev.kind == "arrival":
+            if ev.rid not in specs or ev.t < specs[ev.rid][0]:
+                specs[ev.rid] = (ev.t, QoESpec(ttft=ev.data["ttft"],
+                                               tds=ev.data["tds"]))
         elif ev.kind == "emit":
             emits.setdefault(ev.rid, []).extend(
                 [ev.t] * int(ev.data["k"]))
@@ -287,6 +325,7 @@ def qoe_from_trace(events: List[TraceEvent]) -> Dict[int, float]:
         if not times:
             out[rid] = 0.0          # shed / never served
         else:
-            out[rid] = float(qoe_exact(np.asarray(times), arrival, spec,
+            times = np.sort(np.asarray(times, np.float64))
+            out[rid] = float(qoe_exact(times, arrival, spec,
                                        response_len=len(times)))
     return out

@@ -7,6 +7,8 @@ from repro.serving.lossless import (FLIP_TOL, all_flips_documented,
                                     timing_fingerprint)
 from repro.serving.simulator import ServingSimulator, SimConfig, SimResult
 from repro.serving.speculative import DraftProposer, check_speculation_compatible
+from repro.serving.tolerance import (Tolerance, ToleranceReport,
+                                     ToleranceSpec, compare_requests)
 
 __all__ = [
     "Request", "ReqState", "KVSlotManager", "ServingEngine",
@@ -15,4 +17,5 @@ __all__ = [
     "DraftProposer", "check_speculation_compatible",
     "FLIP_TOL", "fingerprint", "timing_fingerprint", "first_divergence",
     "exact_margin", "classify_flip", "audit_flips", "all_flips_documented",
+    "Tolerance", "ToleranceSpec", "ToleranceReport", "compare_requests",
 ]

@@ -9,7 +9,31 @@ greedily sampled.
 
 The clock is virtual by default (advanced by the LatencyModel per step) so
 QoE specs in seconds are meaningful on a CPU container and tests are
-deterministic; ``clock="wall"`` uses wall time on real hardware.
+deterministic.
+
+``clock="wall"`` (PR 9) runs in *real time, paced to the LatencyModel
+schedule*: every ``_tick(dt)`` sleeps off whatever part of ``dt`` the host
+computation didn't already consume, then stamps ``self.now`` with a real
+``time.monotonic()`` reading relative to ``reset()``. The engine therefore
+advances on the same schedule as the virtual clock — idle engines sleep
+until the next arrival instead of jumping the clock — but every recorded
+timestamp carries genuine OS scheduling jitter, sleep quantization, and
+whatever the host stole. Consequences, by design:
+
+* **Token text is identical** to the virtual-clock run of the same trace:
+  the clock only decides *when* things happen, never *what* is computed —
+  per-slot decode is row-independent and swap preemption is exact — so as
+  long as admission order is preserved the emitted ids match 1:1
+  (tests/test_tolerance.py pins this; the CI server smoke re-asserts it
+  over a real socket).
+* **Timestamps are NOT bit-exact**, so wall-clock runs are validated by
+  the tolerance-based differential harness (repro.serving.tolerance):
+  TTFT/TDS/QoE distributions must agree with the virtual reference within
+  stated tolerances. If the host cannot keep up with the modeled
+  schedule, the drift shows up there — that is the harness *measuring*
+  the gap, not a bug in the clock.
+* The multi-step fast path is disabled (see below) and ``run()`` takes
+  real seconds: wall engines are for serving (repro.server), not sweeps.
 
 The engine also serves as the oracle for validating the simulator
 (tests/test_sim_vs_engine.py): same scheduler, same workload, same latency
@@ -592,6 +616,48 @@ class ServingEngine:
         # current live set deadlocked — try again
         self.stuck = False
 
+    def cancel(self, rid: int) -> bool:
+        """Abort a request by rid (client disconnect / explicit cancel).
+
+        The request is finalized immediately with whatever it has emitted:
+        marked ``cancelled`` + FINISHED, its KV slot (or parked host swap
+        slices) freed, and the scheduler notified — so the next step()'s
+        knapsack prices the freed memory. Safe in any state; returns False
+        if the rid is unknown or already finished (cancel racing normal
+        completion is expected with live clients and must be a no-op)."""
+        t = self.wall_now()
+        for i in range(self._pending_pos, len(self._pending)):
+            r = self._pending[i]
+            if r.rid == rid:
+                # never admitted: no fluid slot, scheduler never saw it
+                del self._pending[i]
+                r.cancelled = True
+                r.state = ReqState.FINISHED
+                r.finish_time = t
+                if self.obs is not None:
+                    self.obs.cancel(r, t)
+                return True
+        for r in self.live:
+            if r.rid == rid:
+                if r.state == ReqState.RUNNING:
+                    slot = r.engine_slot
+                    self.kv.release(r)
+                    self.slot_req.pop(slot, None)
+                elif r.state == ReqState.SWAPPED:
+                    self.kv.host_store.pop(r.rid, None)
+                    self.kv.draft_store.pop(r.rid, None)
+                r.cancelled = True
+                r.state = ReqState.FINISHED
+                r.finish_time = t
+                r.prefill_cursor = 0
+                self.sched.on_request_finish(r)
+                self.live = [x for x in self.live if x is not r]
+                self.stuck = False   # freed memory may unblock the rest
+                if self.obs is not None:
+                    self.obs.cancel(r, t)
+                return True
+        return False
+
     @property
     def pending(self) -> List[Request]:
         """Submitted-but-not-admitted requests (protocol view; the hot loop
@@ -619,10 +685,33 @@ class ServingEngine:
 
     # ---------------------------------------------------------------- clock
     def _tick(self, seconds: float) -> None:
+        """Advance the clock by one modeled operation.
+
+        Virtual: now += seconds (deterministic). Wall: the operation's
+        *deadline* is now + seconds; sleep off whatever the host's real
+        computation left of it, then stamp a real monotonic reading — so
+        the engine is paced to the LatencyModel schedule but timestamps
+        carry true wall jitter. A host slower than the schedule never
+        sleeps and simply drifts late (the tolerance harness measures it).
+        """
         if self.clock == "virtual":
             self.now += seconds
         else:
-            self.now = time.monotonic() - self._wall0
+            deadline = self.now + seconds
+            w = time.monotonic() - self._wall0
+            if deadline > w:
+                time.sleep(deadline - w)
+                w = time.monotonic() - self._wall0
+            self.now = w
+
+    def wall_now(self) -> float:
+        """Current time on this engine's clock for *external* events
+        (arrival stamping by a live frontend): a fresh monotonic reading
+        in wall mode, `self.now` in virtual mode (where time only exists
+        between steps)."""
+        if self.clock == "virtual":
+            return self.now
+        return time.monotonic() - self._wall0
 
     # -------------------------------------------------------------- prefill
     def _prompt_tokens(self, r: Request) -> np.ndarray:
@@ -1128,7 +1217,17 @@ class ServingEngine:
         if self.stuck or not self.has_work:
             return False
         if not self.live and self._pending_pos < len(self._pending):
-            self.now = max(self.now, self._pending[self._pending_pos].arrival)
+            nxt = self._pending[self._pending_pos].arrival
+            if self.clock != "virtual" and nxt > self.now:
+                # an idle wall-clock engine waits out the gap for real
+                # (the virtual clock jumps it); re-read after the sleep so
+                # the admission timestamp is a genuine reading
+                w = time.monotonic() - self._wall0
+                if nxt > w:
+                    time.sleep(nxt - w)
+                self.now = max(self.now, time.monotonic() - self._wall0)
+            else:
+                self.now = max(self.now, nxt)
         self._admit_arrivals()
         if not self.live:
             return True

@@ -178,6 +178,37 @@ class ServingSimulator:
         # deadlocked (e.g. an oversized prompt) — try again
         self.stuck = False
 
+    def cancel(self, rid: int) -> bool:
+        """Abort a request by rid — steppable-backend parity with
+        ServingEngine.cancel: mark cancelled + FINISHED with whatever was
+        emitted, free its host-KV accounting, notify the scheduler. False
+        when the rid is unknown or already finished (a cancel racing
+        normal completion is a no-op)."""
+        for i in range(self._pending_pos, len(self._pending)):
+            r = self._pending[i]
+            if r.rid == rid:
+                del self._pending[i]
+                r.cancelled = True
+                r.state = ReqState.FINISHED
+                r.finish_time = self.now
+                if self.obs is not None:
+                    self.obs.cancel(r, self.now)
+                return True
+        for r in self.live:
+            if r.rid == rid:
+                if r.state == ReqState.SWAPPED:
+                    self.host_kv_used -= r.context_len
+                r.cancelled = True
+                r.state = ReqState.FINISHED
+                r.finish_time = self.now
+                self.sched.on_request_finish(r)
+                self.live = [x for x in self.live if x is not r]
+                self.stuck = False
+                if self.obs is not None:
+                    self.obs.cancel(r, self.now)
+                return True
+        return False
+
     @property
     def pending(self) -> List[Request]:
         """Submitted-but-not-admitted requests (protocol view; the hot loop

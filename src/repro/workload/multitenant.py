@@ -36,6 +36,11 @@ class TenantSpec:
     dataset: str = "sharegpt"    # length distribution ("sharegpt"|"multiround")
     weight: float = 1.0          # SLO contract weight (WSC fair share)
     qoe_floor: Optional[float] = None   # per-tenant contract QoE floor
+    # access-link scenario this tenant's users sit behind (a key of
+    # repro.core.network.NETWORK_SCENARIOS); None = ideal link, which keeps
+    # pre-existing workloads byte-identical. Consumers (client buffers,
+    # QoE-under-network evaluation) instantiate via `make_network(name)`.
+    network: Optional[str] = None
 
     def contract(self) -> Optional[SLOContract]:
         """SLOContract carried by this tenant's requests — only when the

@@ -1,0 +1,185 @@
+"""§5 client buffer under network delay/loss/jitter models (ISSUE 9 sat. 3).
+
+Covers: identity link preserves existing timelines bit-exactly; in-order
+(head-of-line) delivery; determinism of the seeded draws; pacing stays
+smooth (no stall longer than the buffer target) under injected jitter once
+the buffer has built a lead; QoE degrades monotonically with loss rate
+(exact, via the monotone-coupled draws); the scenario catalog orders QoE
+from clean to hostile links.
+"""
+import numpy as np
+import pytest
+
+from repro.core.network import (
+    NETWORK_SCENARIOS,
+    JitterLossLink,
+    NetworkModel,
+    make_network,
+    qoe_under_network,
+)
+from repro.core.qoe import QoESpec, pace_delivery, qoe_exact
+from repro.core.token_buffer import TokenBuffer
+
+SPEC = QoESpec(ttft=1.0, tds=4.8)
+# a stringent spec for degradation tests — with the default reading spec the
+# buffer hides mild impairments entirely (QoE pins at 1.0), which is §5's
+# point but leaves nothing to order
+TIGHT = QoESpec(ttft=0.2, tds=6.0)
+
+
+def steady_emits(n=40, rate=8.0, start=0.3):
+    """Server emitting faster than the user's TDS (buffer builds a lead)."""
+    return start + np.arange(n) / rate
+
+
+# ---------------------------------------------------------------------------
+# identity link + plumbing
+# ---------------------------------------------------------------------------
+
+def test_identity_link_is_transparent():
+    e = steady_emits()
+    net = NetworkModel()
+    assert np.array_equal(net.arrivals(e), e)
+    # pace_delivery(..., network=identity) == pace_delivery(...)
+    assert np.array_equal(pace_delivery(e, SPEC.tds, network=NetworkModel()),
+                          pace_delivery(e, SPEC.tds))
+
+
+def test_token_buffer_network_default_unchanged():
+    e = steady_emits(10)
+    plain = TokenBuffer(SPEC.tds)
+    netted = TokenBuffer(SPEC.tds, network=NetworkModel())
+    for t in e:
+        assert plain.push(t) == netted.push(t)
+    assert plain.deliveries == netted.deliveries
+
+
+def test_token_buffer_incremental_matches_vectorized():
+    e = steady_emits(25)
+    link = JitterLossLink(delay=0.05, jitter=0.03, loss=0.05, seed=7)
+    buf = TokenBuffer(SPEC.tds, network=link.clone())
+    inc = np.array([buf.push(t) for t in e])
+    vec = pace_delivery(e, SPEC.tds, network=link.clone())
+    np.testing.assert_allclose(inc, vec)
+
+
+def test_in_order_delivery_head_of_line_blocks():
+    # a huge one-off latency on token 3 must delay every later arrival
+    class Spike(NetworkModel):
+        def latency(self, i):
+            return 5.0 if i == 3 else 0.0
+
+    e = np.arange(10, dtype=float)
+    arr = Spike().arrivals(e)
+    assert np.all(np.diff(arr) >= 0.0)
+    assert arr[3] == pytest.approx(e[3] + 5.0)
+    # tokens 4..8 emitted before the spike clears: they queue behind it
+    assert np.all(arr[4:9] == arr[3])
+    assert arr[9] == pytest.approx(9.0)
+
+
+def test_draws_deterministic_and_call_pattern_independent():
+    a = JitterLossLink(delay=0.02, jitter=0.05, loss=0.1, seed=3)
+    b = JitterLossLink(delay=0.02, jitter=0.05, loss=0.1, seed=3)
+    # probe b out of order first — the per-index draws must not shift
+    b.latency(17)
+    lat_a = [a.latency(i) for i in range(20)]
+    lat_b = [b.latency(i) for i in range(20)]
+    assert lat_a == lat_b
+    e = steady_emits()
+    np.testing.assert_array_equal(a.arrivals(e), a.arrivals(e))
+
+
+# ---------------------------------------------------------------------------
+# smooth pacing under jitter (satellite requirement)
+# ---------------------------------------------------------------------------
+
+def test_pacing_smooth_under_jitter():
+    """Once the buffer holds a lead, injected jitter must not surface as a
+    user-visible stall: inter-display gaps never exceed the buffer target
+    (1/tds), up to float slack."""
+    e = steady_emits(n=60, rate=8.0)       # generation 8 tok/s > tds 4.8
+    link = JitterLossLink(delay=0.03, jitter=0.04, seed=11)
+    d = pace_delivery(e, SPEC.tds, network=link)
+    gaps = np.diff(d)
+    target = 1.0 / SPEC.tds
+    # warmup: the first few tokens may arrive before any lead exists; the
+    # generation-vs-tds surplus buys >= one jittered transit per token, so
+    # by token 5 the lead dominates the jitter scale
+    assert np.all(gaps[5:] <= target + 1e-9), (
+        f"stall longer than buffer target: max gap {gaps[5:].max():.4f}s "
+        f"vs target {target:.4f}s")
+    # and pacing is exactly the target once smooth (buffer is withholding)
+    assert np.all(gaps[5:] >= target - 1e-9)
+
+
+def test_jitter_without_buffer_lead_does_stall():
+    """Control for the test above: when generation is *slower* than the
+    user's TDS there is no lead to absorb jitter, so stalls do appear —
+    the smoothness in test_pacing_smooth_under_jitter is the buffer's
+    doing, not an artifact of a tame link model."""
+    e = steady_emits(n=40, rate=3.0)       # generation 3 tok/s < tds 4.8
+    link = JitterLossLink(jitter=0.25, seed=11)
+    d = pace_delivery(e, SPEC.tds, network=link)
+    assert np.max(np.diff(d)) > 1.0 / SPEC.tds + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# QoE degrades monotonically with loss (satellite requirement)
+# ---------------------------------------------------------------------------
+
+def test_qoe_monotone_in_loss():
+    e = steady_emits(n=50, rate=6.0)
+    losses = [0.0, 0.02, 0.05, 0.1, 0.2, 0.4]
+    qoes = []
+    for p in losses:
+        link = JitterLossLink(delay=0.03, jitter=0.01, loss=p, rto=0.25,
+                              seed=5)
+        qoes.append(qoe_under_network(e, 0.0, TIGHT, network=link))
+    # same seed => monotone-coupled draws => exact (not statistical) decay
+    for lo, hi, q_lo, q_hi in zip(losses, losses[1:], qoes, qoes[1:]):
+        assert q_hi <= q_lo + 1e-12, (
+            f"QoE rose when loss went {lo} -> {hi}: {q_lo} -> {q_hi}")
+    assert qoes[-1] < qoes[0]              # decay is strict overall
+
+
+def test_latency_monotone_in_each_knob():
+    base = dict(delay=0.02, jitter=0.03, loss=0.05, rto=0.2, seed=9)
+    ref = JitterLossLink(**base)
+    for knob, bump in [("delay", 0.05), ("jitter", 0.05), ("loss", 0.1),
+                       ("rto", 0.3)]:
+        worse = JitterLossLink(**{**base, knob: base[knob] + bump})
+        for i in range(30):
+            assert worse.latency(i) >= ref.latency(i) - 1e-12, (knob, i)
+
+
+def test_retransmissions_geometric_inversion():
+    link = JitterLossLink(loss=0.5, seed=1)
+    _, u = link._draws(4)
+    k = link.retransmissions(4)
+    assert u <= 0.5 ** k
+    assert u > 0.5 ** (k + 1)
+    assert JitterLossLink(loss=0.0, seed=1).retransmissions(4) == 0
+
+
+# ---------------------------------------------------------------------------
+# scenario catalog
+# ---------------------------------------------------------------------------
+
+def test_scenario_catalog():
+    for name in NETWORK_SCENARIOS:
+        net = make_network(name, seed=2)
+        assert isinstance(net, NetworkModel)
+    assert type(make_network("ideal")) is NetworkModel
+    with pytest.raises(ValueError, match="unknown network scenario"):
+        make_network("dialup_1994")
+
+
+def test_scenarios_order_qoe_clean_to_hostile():
+    e = steady_emits(n=50, rate=6.0)
+    q = {name: qoe_under_network(e, 0.0, TIGHT, network=make_network(name, 3))
+         for name in NETWORK_SCENARIOS}
+    assert q["ideal"] == pytest.approx(qoe_exact(e, 0.0, TIGHT,
+                                                 response_len=e.size))
+    assert q["ideal"] >= q["broadband"] >= q["lossy_wifi"]
+    assert q["broadband"] >= q["satellite"]

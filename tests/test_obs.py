@@ -285,6 +285,61 @@ def test_jsonl_round_trip(traced_run, tmp_path):
     assert qoe_from_trace(evs2) == qoe_from_trace(trace.events)
 
 
+def test_qoe_from_trace_tolerates_out_of_order_events(traced_run):
+    """Regression (ISSUE 9 sat. 1): wall-clock runs interleave replicas and
+    server connections, so a merged trace can deliver a request's events in
+    any file order. Pre-fix, qoe_from_trace fed emit timestamps to
+    pace_delivery in file order (order-sensitive: an unsorted timeline
+    yields a different delivery curve) and took the first-seen arrival
+    event rather than the earliest — both silently wrong on shuffled
+    input. Now the reconstruction must be permutation-invariant and still
+    reconcile exactly with the backend-reported QoE."""
+    trace, _, res = traced_run
+    ref = qoe_from_trace(trace.events)
+    rng = np.random.default_rng(0)
+    for _ in range(3):
+        shuffled = list(trace.events)
+        rng.shuffle(shuffled)
+        assert qoe_from_trace(shuffled) == ref
+    # still reconciles with the ground truth after shuffling
+    shuffled = list(trace.events)[::-1]
+    traced = qoe_from_trace(shuffled)
+    for r in res.requests:
+        assert traced.get(r.rid, 0.0) == r.final_qoe()
+
+
+def test_qoe_from_trace_earliest_arrival_wins():
+    """A fleet hand-off records two arrival events for one rid (fleet-level
+    then replica-level); writer interleaving can put the later one first in
+    the file. The earliest timestamp is the user's true arrival."""
+    from repro.obs.trace import TraceEvent
+    contract = dict(ttft=1.0, tds=4.8)
+    evs = [
+        # later (replica) arrival appears FIRST in file order
+        TraceEvent("arrival", 5.0, 1, 0, dict(contract)),
+        TraceEvent("arrival", 2.0, 1, -1, dict(contract)),
+        TraceEvent("emit", 6.0, 1, 0, {"k": 1, "total": 1}),
+        TraceEvent("emit", 7.0, 1, 0, {"k": 1, "total": 2}),
+    ]
+    from repro.core import QoESpec
+    from repro.core.qoe import qoe_exact
+    want = float(qoe_exact(np.array([6.0, 7.0]), 2.0,
+                           QoESpec(ttft=1.0, tds=4.8), response_len=2))
+    assert qoe_from_trace(evs) == {1: want}
+    assert qoe_from_trace(evs[::-1]) == {1: want}
+
+
+def test_merge_traces_sorted_and_stable(traced_run):
+    from repro.obs.trace import merge_traces
+    trace, _, _ = traced_run
+    evs = trace.events
+    a, b = evs[::2], evs[1::2]
+    merged = merge_traces(a, b)
+    assert len(merged) == len(evs)
+    assert all(x.t <= y.t for x, y in zip(merged, merged[1:]))
+    assert qoe_from_trace(merged) == qoe_from_trace(evs)
+
+
 def test_chrome_trace_export_valid_and_monotone(traced_run, tmp_path):
     trace, _, res = traced_run
     ct = trace.to_chrome_trace()
