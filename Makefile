@@ -3,7 +3,8 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast test-slow bench bench-api bench-arena \
         bench-arena-smoke bench-cluster bench-cluster-engine \
-        bench-hotpath bench-obs bench-scale bench-scale-smoke bench-spec \
+        bench-hotpath bench-obs bench-physical bench-physical-smoke \
+        bench-scale bench-scale-smoke bench-spec \
         bench-server bench-server-smoke serve server-smoke \
         example-quickstart example-cluster example-cluster-engine \
         example-serve-http
@@ -69,6 +70,17 @@ bench-scale:
 # CI-sized scale run (<= 200 requests): same gates, no artifact rewrite
 bench-scale-smoke:
 	$(PYTHON) -m benchmarks.engine_hotpath --scale --smoke
+
+# physical paging + persistent loop (PR 10): page x chunk sweep, physically
+# paged pool vs accounting-only layout (bit-identical + tokens/s gates) and
+# persistent while_loop syncs strictly below the static-scan engine's;
+# read-modify-writes the `physical_paging` key of BENCH_hotpath.json
+bench-physical:
+	$(PYTHON) -m benchmarks.engine_hotpath --physical
+
+# CI-sized physical run: same gates, no artifact rewrite
+bench-physical-smoke:
+	$(PYTHON) -m benchmarks.engine_hotpath --physical --smoke
 
 # scheduling-policy arena (PR 7): policy x adversarial-trace x load sweep;
 # validates the checked-in BENCH_policy_arena.json scoreboard WITHOUT

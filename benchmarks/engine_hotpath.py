@@ -106,6 +106,21 @@ SCALE_FIXED_SLOTS = 16                       # 4096 / max_seq — reservation-bo
 SCALE_PAGED_SLOTS = 64
 SCALE_PAGE = 64
 SCALE_CHUNK = 64
+
+# ---- physical paging section (PR 10): device page pool + persistent loop --
+# Page x chunk sweep on a contended pool (capacity < slots*max_seq, so the
+# physical pool — not slot count — is the binding admission resource).
+# Per combo the physically paged engine must (a) reproduce the
+# accounting-only engine bit-for-bit and (b) match or beat its virtual
+# tokens/s; one combo additionally pins the persistent while_loop's sync
+# count strictly below the static-scan multi-step engine's (unquantized j
+# fuses at least as many iterations per dispatch).
+PHYS_N = 300
+PHYS_SMOKE_N = 80
+PHYS_MAX_SEQ = 96
+PHYS_SLOTS = 16
+PHYS_CAPACITY = PHYS_SLOTS * 64
+PHYS_SWEEP = ((16, 0), (32, 48), (64, 0))    # (page_size, prefill_chunk)
 OBS_OVERHEAD_GATE_PCT = 4.0    # full instrumentation may cost at most this.
                                # The observer cost is a fixed per-event Python
                                # tax, so the PERCENTAGE scales with how fast
@@ -573,6 +588,131 @@ def run_scale(smoke: bool = False) -> None:
           f"({n} requests, equal {SCALE_CAPACITY}-token capacity)")
 
 
+def _phys_variant(model, params, lat, wl, *, page_size: int,
+                  prefill_chunk: int = 0, physical: bool = True,
+                  hotpath=None) -> dict:
+    sched = make_scheduler("andes", PHYS_CAPACITY, lat, SchedulerConfig())
+    eng = ServingEngine(model, params, sched, lat, num_slots=PHYS_SLOTS,
+                        max_seq=PHYS_MAX_SEQ,
+                        capacity_tokens=PHYS_CAPACITY, page_size=page_size,
+                        prefill_chunk=prefill_chunk,
+                        physical_pages=physical, hotpath=hotpath)
+    t0 = time.perf_counter()
+    out = eng.run(clone(wl), max_iterations=500_000)
+    jax.block_until_ready(eng.cache["length"])
+    wall = time.perf_counter() - t0
+    tokens = sum(r.generated for r in out)
+    return {
+        "page_size": page_size,
+        "prefill_chunk": prefill_chunk or None,
+        "physical": eng.physical_pages,
+        "tokens": tokens,
+        "unfinished": sum(r.generated < r.output_len for r in out),
+        "wall_s": round(wall, 2),
+        "tok_per_s_wall": round(tokens / wall, 1),
+        "tok_per_s_virtual": round(tokens / eng.now, 1),
+        "host_syncs": eng.host_syncs,
+        "persistent_blocks": eng.persistent_blocks,
+        "persistent_iters": eng.persistent_iters,
+        "page_scatters": eng.page_scatters,
+        "page_gathers": eng.page_gathers,
+        "preemptions": eng.preemptions,
+        "_fp": fingerprint(out),
+    }
+
+
+def physical_section(n: int) -> dict:
+    """Physically paged cache + persistent device loop vs the
+    accounting-only layout, per (page_size, prefill_chunk) combo. Gates:
+    bit-identical outputs (the layout moves bytes, never tokens or
+    timestamps), physical virtual tokens/s >= accounting-only, and — on
+    the first combo — persistent-loop host syncs strictly below the
+    static-scan multi-step engine's."""
+    cfg = get_smoke_config(ARCH)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    lat = LatencyModel(cfg, TPU_V5E)
+    wl = sharegpt_style_trace(cfg, n, seed=3)
+    for r in wl:
+        # the physical pool enforces the context budget the contiguous
+        # layout only clamps: keep every request inside max_seq
+        r.output_len = min(r.output_len, PHYS_MAX_SEQ - r.prompt_len)
+
+    combos = []
+    for page, chunk in PHYS_SWEEP:
+        phys = _phys_variant(model, params, lat, wl,
+                             page_size=page, prefill_chunk=chunk)
+        acct = _phys_variant(model, params, lat, wl,
+                             page_size=page, prefill_chunk=chunk,
+                             physical=False)
+        combos.append({
+            "physical": phys, "accounting": acct,
+            "gate_bit_identical": phys.pop("_fp") == acct.pop("_fp"),
+            "gate_throughput": phys["tok_per_s_virtual"]
+            >= acct["tok_per_s_virtual"],
+        })
+    page0, chunk0 = PHYS_SWEEP[0]
+    scan = _phys_variant(model, params, lat, wl, page_size=page0,
+                         prefill_chunk=chunk0,
+                         hotpath=HotpathConfig(persistent=False))
+    scan.pop("_fp")
+    persist = combos[0]["physical"]
+    return {
+        "trace": {"n": n, "max_seq": PHYS_MAX_SEQ, "slots": PHYS_SLOTS,
+                  "capacity_tokens": PHYS_CAPACITY, "seed": 3},
+        "combos": combos,
+        "scan_baseline": scan,
+        "gate_persistent_syncs": persist["host_syncs"] < scan["host_syncs"],
+    }
+
+
+def _gate_physical(ph: dict) -> None:
+    for c in ph["combos"]:
+        tag = (f"page={c['physical']['page_size']} "
+               f"chunk={c['physical']['prefill_chunk']}")
+        if c["physical"]["unfinished"] or c["accounting"]["unfinished"]:
+            raise SystemExit(f"physical trace did not fully drain ({tag})")
+        if not c["physical"]["physical"]:
+            raise SystemExit(f"physical engine fell back to accounting "
+                             f"layout ({tag})")
+        if not c["gate_bit_identical"]:
+            raise SystemExit(
+                f"physically paged engine diverged from accounting-only "
+                f"({tag}): the page pool moved a token or a timestamp")
+        if not c["gate_throughput"]:
+            raise SystemExit(
+                f"physical paging slowed the virtual clock ({tag}): "
+                f"{c['physical']['tok_per_s_virtual']} < "
+                f"{c['accounting']['tok_per_s_virtual']} tok/s")
+        if not c["physical"]["persistent_blocks"]:
+            raise SystemExit(f"persistent loop never engaged ({tag})")
+    if not ph["gate_persistent_syncs"]:
+        raise SystemExit(
+            "persistent while_loop did not reduce host syncs below the "
+            f"static scan: {ph['combos'][0]['physical']['host_syncs']} vs "
+            f"{ph['scan_baseline']['host_syncs']}")
+
+
+def run_physical(smoke: bool = False) -> None:
+    """`--physical [--smoke]` / `make bench-physical[-smoke]`: the
+    physically-paged-pool + persistent-loop section. The full run
+    (nightly) read-modify-writes the `physical_paging` key of
+    BENCH_hotpath.json; the smoke run gates only, no artifact rewrite."""
+    n = PHYS_SMOKE_N if smoke else PHYS_N
+    ph = physical_section(n)
+    print(json.dumps(ph, indent=2))
+    _gate_physical(ph)
+    if not smoke:
+        report = json.loads(OUT_JSON.read_text()) if OUT_JSON.exists() else {}
+        report["physical_paging"] = ph
+        OUT_JSON.write_text(json.dumps(report, indent=2) + "\n")
+        print(f"wrote physical_paging section to {OUT_JSON.name}")
+    p0 = ph["combos"][0]["physical"]
+    print(f"OK: physical pool bit-identical across {len(ph['combos'])} "
+          f"page/chunk combos; persistent loop {p0['host_syncs']} syncs vs "
+          f"{ph['scan_baseline']['host_syncs']} scan ({n} requests)")
+
+
 def run_obs_only() -> None:
     """`--obs` / `make bench-obs`: the observability section alone —
     validates and prints, never rewrites BENCH_hotpath.json."""
@@ -594,6 +734,9 @@ def main() -> None:
         return
     if "--scale" in sys.argv[1:]:
         run_scale(smoke="--smoke" in sys.argv[1:])
+        return
+    if "--physical" in sys.argv[1:]:
+        run_physical(smoke="--smoke" in sys.argv[1:])
         return
     rows = run(quick=True)
     for r in rows:

@@ -207,7 +207,29 @@ class Scheduler:
         idle_steps()+1 decode iterations into one device dispatch and
         replay the skipped schedule() calls as `iteration += k` bookkeeping.
         The base scheduler (and any stateful policy like round-robin or the
-        fairness counters) answers 0: never skip me."""
+        fairness counters) answers 0: never skip me.
+
+        Certificate contract (PR 10 — the device-resident persistent
+        loop spends it in three ways, all of which a policy's answer
+        must stay sound for):
+
+        * **Unquantized:** `decode_persistent` takes the fused length as
+          loop DATA, so the certificate is consumed at full resolution —
+          a policy must not assume the engine rounds it down.
+        * **Token-denominated under speculation:** a speculative verify
+          round commits 1..k+1 tokens per slot, so the engine asks for
+          `max_steps = s·(k+1) - 1` single-token iterations and runs
+          `s` rounds — the projection must therefore be sound per TOKEN
+          of growth, not per scheduler invocation. (The acceptance EMA
+          may drift inside the block; the engine separately re-checks
+          any EMA-dependent trigger at its worst case, so `idle_steps`
+          itself may price the current EMA.)
+        * **Page pre-reservation bound:** physically paged engines
+          reserve every page the block can write BEFORE dispatch, so a
+          paged projection (see AndesScheduler) must count the rounded
+          page demand of `+max_steps` tokens per running request — an
+          over-grant here is not a soft miss but a pool overdraft the
+          engine refuses to serve."""
         return 0
 
     def skip_iterations(self, k: int) -> None:

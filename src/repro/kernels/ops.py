@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from repro.kernels import ref as _ref
 from repro.kernels import decode_attention as _dec
 from repro.kernels import flash_attention as _fa
+from repro.kernels import paged_attention as _paged
 from repro.kernels import selective_scan as _ss
 
 DEFAULT_IMPL = "ref"
@@ -70,6 +71,28 @@ def decode_attention(
         )
     return _ref.decode_attention_ref(
         q, k, v, lengths, window=window, sm_scale=sm_scale
+    )
+
+
+def paged_decode_attention(
+    q, k_pool, v_pool, block_tables, lengths,
+    *,
+    window: Optional[int] = None,
+    sm_scale: Optional[float] = None,
+    impl: str = DEFAULT_IMPL,
+):
+    """Single-token decode attention over a physical KV page pool.
+
+    q (B,H,hd); k_pool/v_pool (P,page,KV,hd); block_tables (B,max_pages)
+    int32 (entries >= P are sentinels past a request's allocation)."""
+    if impl == "pallas":
+        return _paged.paged_decode_attention(
+            q, k_pool, v_pool, block_tables, lengths,
+            window=window, sm_scale=sm_scale, interpret=_interpret(),
+        )
+    return _ref.paged_decode_attention_ref(
+        q, k_pool, v_pool, block_tables, lengths,
+        window=window, sm_scale=sm_scale,
     )
 
 

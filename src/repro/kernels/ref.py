@@ -86,6 +86,40 @@ def decode_attention_ref(
     return out[:, 0]
 
 
+def paged_decode_attention_ref(
+    q: jax.Array,             # (B, H, hd) — single new token per request
+    k_pool: jax.Array,        # (P, page, KV, hd) physical page pool
+    v_pool: jax.Array,        # (P, page, KV, hd)
+    block_tables: jax.Array,  # (B, max_pages) int32 page ids; >= P = sentinel
+    lengths: jax.Array,       # (B,) tokens in cache (incl. current)
+    *,
+    window: Optional[jax.Array] = None,
+    sm_scale: Optional[float] = None,
+) -> jax.Array:
+    """Decode attention over a physically paged KV pool, jnp oracle.
+
+    Gathers each request's pages back into a contiguous (B, S', KV, hd)
+    view (S' = max_pages * page) and defers to `decode_attention_ref`.
+    Sentinel table entries are clamped before the gather; whatever rows
+    they alias are masked out by `lengths` (a request's block table always
+    covers ceil(length / page) real pages, so every attended position maps
+    to a page the request owns). When S' equals the contiguous cache depth
+    the result is bit-identical to `decode_attention_ref` on the
+    equivalent contiguous cache: masked positions contribute exact zeros
+    (exp(NEG_INF - m) underflows to 0.0) and the reduction shapes match —
+    the degenerate-oracle engine differentials rely on this.
+    """
+    b = q.shape[0]
+    p_total, page = k_pool.shape[0], k_pool.shape[1]
+    bt = jnp.minimum(block_tables, p_total - 1)
+    n_pages = bt.shape[1]
+    k = k_pool[bt].reshape(b, n_pages * page, *k_pool.shape[2:])
+    v = v_pool[bt].reshape(b, n_pages * page, *v_pool.shape[2:])
+    return decode_attention_ref(
+        q, k, v, lengths, window=window, sm_scale=sm_scale
+    )
+
+
 def selective_scan_ref(
     x: jax.Array,      # (B, S, D)   — D = d_inner
     dt: jax.Array,     # (B, S, D)   — softplus'd timestep

@@ -136,6 +136,45 @@ def attn_decode(
     return o.reshape(b, -1) @ p["wo"], k_cache, v_cache
 
 
+def attn_decode_paged(
+    p, x_tok, k_pool, v_pool, block_tables, lengths, cfg: ModelConfig, *,
+    window: Optional[int] = None,
+    impl: str = "ref",
+    kv_repeat: int = 1,
+):
+    """One-token decode against a physically paged KV pool.
+
+    x_tok (B, d); k_pool/v_pool (P, page, KV, hd) shared across slots;
+    block_tables (B, max_pages) int32 names each slot's pages in order
+    (entries >= P are sentinels). Writes the new k/v at page
+    block_tables[b, lengths[b] // page], offset lengths[b] % page — the
+    paged image of `attn_decode`'s row write — then attends through the
+    table. Sentinel-targeted writes drop (a slot never touches pages it
+    does not own) and a clamped page index past the table width resolves
+    to the slot's own last entry, mirroring the dynamic_update_slice
+    clamp of the contiguous path. Returns (out (B, d), k_pool', v_pool')."""
+    b, d = x_tok.shape
+    x = x_tok[:, None, :]
+    pos = lengths[:, None]                                     # (B, 1)
+    q, k_new, v_new = _qkv(p, x, cfg, pos, apply_rope=(cfg.kind != "audio"),
+                           kv_repeat=kv_repeat)
+
+    p_total, page = k_pool.shape[0], k_pool.shape[1]
+    max_pages = block_tables.shape[1]
+    pg_idx = jnp.minimum(lengths // page, max_pages - 1)
+    pid = jnp.take_along_axis(block_tables, pg_idx[:, None], axis=1)[:, 0]
+    off = lengths % page
+    k_pool = k_pool.at[pid, off].set(
+        k_new[:, 0].astype(k_pool.dtype), mode="drop")
+    v_pool = v_pool.at[pid, off].set(
+        v_new[:, 0].astype(v_pool.dtype), mode="drop")
+    o = ops.paged_decode_attention(
+        q[:, 0], k_pool, v_pool, block_tables, lengths + 1,
+        window=window, impl=impl,
+    )
+    return o.reshape(b, -1) @ p["wo"], k_pool, v_pool
+
+
 # ---------------------------------------------------------------------------
 # Cross attention (enc-dec)
 # ---------------------------------------------------------------------------

@@ -14,19 +14,31 @@ A single pytree carries everything the decode step needs:
 Static shapes are deliberate (TPU/XLA); token-granular *accounting* for the
 scheduler happens in serving/kv_manager.py, not here. See DESIGN.md §3.
 
-Paged KV (PR 8) does not change this layout: pages and block tables are
-HOST-SIDE accounting constructs. The device cache stays one fixed-depth
-row per slot — a request's tokens are physically contiguous in its row —
-while `KVSlotManager` tracks which logical pages of the shared capacity
-budget each resident's context occupies (`block_table`), charges
-admission/growth in page granularity, and frees tail pages on partial
-eviction. That split keeps every jitted shape static (no gather over a
-physical page pool on the hot path) yet gives the scheduler the paged
-capacity arithmetic that lets equal token capacity back 4x the resident
-slots. `length` stays the single validity gate either way: chunked
-prefill commits a growing prefix into the same row and re-pins `length`
-at each chunk, so a partially-prefilled slot is always a valid context
-prefix to attention.
+Paged KV comes in two depths. PR 8's *accounting-only* paging keeps the
+contiguous layout above: pages and block tables are host-side constructs
+in `KVSlotManager` that give the scheduler page-granular capacity
+arithmetic, while each request still owns one fixed-depth device row.
+*Physical* paging (`init_paged_cache`) makes the device see pages too:
+`k`/`v` become a shared pool of fixed-size pages,
+
+  k, v          (L_attn, P, page, KV, hd)   P = physical pool size
+  block_tables  (B, max_pages)  i32         page ids per slot, ordered;
+                                            entries >= P are sentinels
+
+and a slot's context lives scattered across the pages its block-table
+row names (entry ``i`` covers absolute positions [i*page, (i+1)*page)).
+Decode writes land at (block_tables[b, length//page], length % page) via
+`paged_write_tokens`; attention gathers through the table (the pallas
+paged kernel resolves it at DMA-issue time). Now `evict_tail` and
+release free real HBM rows and admission capacity IS the physical pool —
+token-granular preemption moves memory, not just ledger entries. Every
+jitted shape stays static: the pool, the table width, and `length` are
+fixed; only table *values* change, uploaded by the engine when the
+manager's tables move. `length` stays the single validity gate in both
+layouts: chunked prefill commits a growing prefix (page by page when
+physical) and re-pins `length` at each chunk, so a partially-prefilled
+slot is always a valid context prefix to attention, and positions beyond
+`length` — including whole sentinel-mapped pages — are never attended.
 
 Speculative-decoding rollback contract (`with_lengths`): for attention
 caches, `length` alone defines validity — attention never reads past it,
@@ -92,6 +104,101 @@ def init_cache(
         cache["enc_length"] = arr((batch,), jnp.int32)
 
     return cache
+
+
+def supports_physical_paging(cfg: ModelConfig) -> bool:
+    """Physical paging covers archs whose decode state is pure
+    length-gated self-attention KV: recurrent state (ssm/hybrid) has no
+    positional gate to page against, and encoder memory (encdec/audio)
+    is a second, un-paged cache. Those run accounting-only paging."""
+    return cfg.kind in ("dense", "vlm", "moe")
+
+
+def init_paged_cache(
+    cfg: ModelConfig,
+    batch: int,
+    num_pages: int,
+    page_size: int,
+    max_seq: int,
+    *,
+    dtype=jnp.bfloat16,
+    abstract: bool = False,
+    kv_repeat: int = 1,
+):
+    """Build a physically paged decode cache (module docstring layout).
+
+    `num_pages` is the physical pool size (admission capacity); sentinel
+    table entries equal `num_pages` so unallocated writes drop and
+    unallocated gathers clamp into masked territory."""
+    assert supports_physical_paging(cfg), cfg.kind
+    assert 0 < page_size, page_size
+
+    def arr(shape, dt, fill=0):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dt)
+        if fill:
+            return jnp.full(shape, fill, dt)
+        return jnp.zeros(shape, dt)
+
+    kv, hd = cfg.num_kv_heads * kv_repeat, cfg.head_dim
+    n_attn = _num_attn_applications(cfg)
+    max_pages = -(-max_seq // page_size)
+    return {
+        "length": arr((batch,), jnp.int32),
+        "k": arr((n_attn, num_pages, page_size, kv, hd), dtype),
+        "v": arr((n_attn, num_pages, page_size, kv, hd), dtype),
+        "block_tables": arr((batch, max_pages), jnp.int32, num_pages),
+    }
+
+
+def is_paged(cache) -> bool:
+    """Static layout predicate: pytree structure, not data, decides the
+    decode routing (a jitted step traces one branch per cache layout)."""
+    return "block_tables" in cache
+
+
+def paged_write_tokens(pool, block_tables, starts, seg, counts):
+    """Scatter a contiguous token segment into the page pool.
+
+    pool (n_attn, P, page, KV, hd); block_tables (B, max_pages);
+    seg (n_attn, B, n, KV, hd) holds `counts[b]` valid tokens per slot,
+    landing at absolute positions starts[b] .. starts[b]+counts[b].
+    Positions beyond `counts` or past the table width are routed to the
+    sentinel id and dropped by the scatter — a slot can never write a
+    page it does not own. Returns the updated pool."""
+    p_total, page = pool.shape[1], pool.shape[2]
+    n = seg.shape[2]
+    max_pages = block_tables.shape[1]
+    pos = starts[:, None] + jnp.arange(n)[None]              # (B, n)
+    pg_idx = pos // page
+    pid = jnp.take_along_axis(
+        block_tables, jnp.minimum(pg_idx, max_pages - 1), axis=1)
+    valid = (jnp.arange(n)[None] < counts[:, None]) & (pg_idx < max_pages)
+    pid = jnp.where(valid, pid, p_total)                     # -> dropped
+    off = pos % page
+    return pool.at[:, pid, off].set(seg.astype(pool.dtype), mode="drop")
+
+
+def paged_gather_rows(pool, table_rows, max_seq):
+    """Rebuild contiguous cache rows from the pool.
+
+    pool (n_attn, P, page, KV, hd); table_rows (B, max_pages) ->
+    (n_attn, B, max_seq, KV, hd). Sentinels clamp to an arbitrary pool
+    page; callers only read positions < length (swap-out stores whole
+    rows, but restore + attention re-mask by length, same as the stale
+    tail of a contiguous row)."""
+    p_total, page = pool.shape[1], pool.shape[2]
+    rows = pool[:, jnp.minimum(table_rows, p_total - 1)]
+    # (n_attn, B, max_pages, page, KV, hd) -> (n_attn, B, S', KV, hd)
+    flat = rows.reshape(rows.shape[0], rows.shape[1], -1, *rows.shape[4:])
+    return flat[:, :, :max_seq]
+
+
+def with_block_tables(cache, tables):
+    """Re-pin the device block tables (pure). The engine calls this when
+    the KV manager's tables moved (allocate/grow/evict/release) — table
+    VALUES are data, so no recompilation."""
+    return dict(cache, block_tables=jnp.asarray(tables, jnp.int32))
 
 
 def with_lengths(cache, lengths):

@@ -127,6 +127,22 @@ class Model:
             abstract=abstract, kv_repeat=self.kv_repeat,
         )
 
+    def supports_physical_paging(self) -> bool:
+        return cache_lib.supports_physical_paging(self.cfg)
+
+    def init_paged_cache(self, batch: int, num_pages: int, page_size: int,
+                         max_seq: int, *, dtype=jnp.float32,
+                         abstract: bool = False):
+        """Physically paged decode cache: a (num_pages, page_size)-shaped
+        KV pool shared across slots plus per-slot block tables (see
+        models/cache.py). decode_step / decode_multi / decode_persistent
+        route through the paged attention path automatically — the cache
+        pytree's structure is the dispatch."""
+        return cache_lib.init_paged_cache(
+            self.cfg, batch, num_pages, page_size, max_seq, dtype=dtype,
+            abstract=abstract, kv_repeat=self.kv_repeat,
+        )
+
     def prefill(self, params, batch, cache):
         """Run the prompt, fill the cache, return last-token logits.
 
@@ -226,6 +242,54 @@ class Model:
             body, (tokens, cache), None, length=j
         )
         return toks, cache
+
+    def decode_persistent(self, params, tokens, cache, j, active,
+                          *, j_cap: int, eos_id: int = -1):
+        """Device-resident persistent decode loop (`lax.while_loop`).
+
+        Decodes up to `j` greedy iterations without any host round-trip:
+        tokens (B,) int32, j a *dynamic* i32 scalar bounded by the static
+        `j_cap` (the out-buffer depth — one compiled loop serves every
+        block size, where `decode_multi`'s static-j scan recompiles per
+        value and forces the engine to quantize). `active` (B,) bool marks
+        the slots whose progress matters; with eos_id >= 0 the loop ALSO
+        stops as soon as every active slot has emitted EOS, so a block cut
+        short by end-of-sequence costs only the iterations it commits
+        instead of the full scan depth.
+
+        The body is `decode_step` + argmax — the exact scan body of
+        `decode_multi` — so the first `steps` rows of `ids` are
+        bit-identical to the scan and to sequential single-step decode
+        (tests/test_persistent_loop.py pins both identities). Iterations a
+        slot's EOS invalidates are rolled back by the caller through
+        `length` alone (models/cache.py rollback contract); rows of `ids`
+        past `steps` are zeros and must not be read.
+
+        Returns (ids (j_cap, B) int32, cache', steps i32)."""
+        b = tokens.shape[0]
+
+        def cond(carry):
+            step, _tok, _c, _out, alive = carry
+            return jnp.logical_and(step < j, jnp.any(alive))
+
+        def body(carry):
+            step, tok, c, out, alive = carry
+            logits, c = self.decode_step(params, tok, c)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            out = out.at[step].set(nxt)
+            if eos_id >= 0:
+                alive = jnp.logical_and(alive, nxt != eos_id)
+            return step + 1, nxt, c, out, alive
+
+        carry0 = (
+            jnp.asarray(0, jnp.int32),
+            tokens,
+            cache,
+            jnp.zeros((j_cap, b), jnp.int32),
+            jnp.asarray(active, bool),
+        )
+        steps, _, cache, ids, _ = jax.lax.while_loop(cond, body, carry0)
+        return ids, cache, steps
 
     def verify_step(self, params, tokens, cache):
         """Speculative-decoding verify: tokens (B, T) int32 ->

@@ -376,13 +376,24 @@ def decode_step(
     h = embed_apply(params["embed"], tokens)            # (B, d)
 
     if cfg.kind in ("dense", "vlm", "moe"):
+        # static layout branch: a physically paged cache (block_tables in
+        # the pytree) routes through the paged pool; the table itself is
+        # layer-invariant, so it rides in as a scan closure, not an xs
+        paged = "block_tables" in cache
+
         def block(h, xs):
             bp, kc, vc = xs
             x = rms_norm(h, bp["attn_norm_scale"], cfg.norm_eps)
-            a, kc, vc = attn.attn_decode(
-                bp["attn"], x, kc, vc, lengths, cfg, window=window, impl=impl,
-                kv_repeat=kv_repeat,
-            )
+            if paged:
+                a, kc, vc = attn.attn_decode_paged(
+                    bp["attn"], x, kc, vc, cache["block_tables"], lengths,
+                    cfg, window=window, impl=impl, kv_repeat=kv_repeat,
+                )
+            else:
+                a, kc, vc = attn.attn_decode(
+                    bp["attn"], x, kc, vc, lengths, cfg, window=window,
+                    impl=impl, kv_repeat=kv_repeat,
+                )
             h = h + a
             x = rms_norm(h, bp["mlp_norm_scale"], cfg.norm_eps)
             if cfg.kind == "moe":

@@ -614,3 +614,22 @@ def register_backend_gauges(registry: MetricsRegistry, backend,
                  lambda: backend.kv.total_pages)
             bind("kv_page_utilization", "KV page occupancy / page pool",
                  lambda: backend.kv.page_utilization)
+            bind("kv_physical_pages_used",
+                 "device page-pool rows holding data (overdraft clamped)",
+                 lambda: backend.kv.physical_pages_used)
+            bind("kv_physical_page_utilization",
+                 "physical page occupancy / pool (never exceeds 1.0)",
+                 lambda: backend.kv.physical_page_utilization)
+            bind("kv_overdraft_pages",
+                 "ledger pages past the physical pool (fictional ids)",
+                 lambda: getattr(backend.kv, "overdraft_pages", 0))
+        if getattr(backend, "physical_pages", False):
+            bind("kv_page_gathers_total",
+                 "pool->contiguous row gathers (swap-out reads)",
+                 lambda: backend.page_gathers)
+            bind("kv_page_scatters_total",
+                 "contiguous->pool scatter commits (prefill/swap-in)",
+                 lambda: backend.page_scatters)
+            bind("kv_page_gather_bytes_total",
+                 "bytes moved by page-pool gathers",
+                 lambda: backend.page_gather_bytes)

@@ -95,6 +95,12 @@ class Observer:
         """Engine ran a fused block of `j` decode iterations under a
         scheduler `idle_steps` certificate, committing `committed` tokens."""
 
+    def persistent_loop(self, t, j, steps, *, replica=-1):
+        """The fused block ran as a device-resident while_loop: planned
+        `j` iterations, the device executed `steps` (< j only when every
+        active row emitted its EOS early). Fires IN ADDITION to
+        `multi_step` — the persistent path is a strict specialization."""
+
     # ---- fleet -------------------------------------------------------------
     def route(self, req, t, replica_id, gain, scores, *, replica=-1):
         """Router picked `replica_id`; `scores` maps replica id -> marginal
@@ -149,7 +155,7 @@ HOOK_NAMES = (
     "submit", "admit", "prefill", "prefill_chunk", "emit", "preempt",
     "swap_in", "finish",
     "shed", "defer", "cancel",
-    "schedule", "multi_step",
+    "schedule", "multi_step", "persistent_loop",
     "route", "admission", "scale",
     "sync", "dispatch", "jit_compile", "spec",
     "connection", "sse_flush", "drain",

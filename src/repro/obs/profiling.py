@@ -28,6 +28,8 @@ class ProfilingObserver(Observer):
       engine_jit_compiles_total        new jit shape signatures
       engine_multi_step_blocks_total   fused decode blocks executed
       engine_multi_step_iters_total    iterations covered by those blocks
+      engine_persistent_blocks_total   of which: device while_loop blocks
+      engine_persistent_iters_total    device loop iterations executed
       engine_spec_proposed_total       speculative tokens drafted
       engine_spec_accepted_total       speculative tokens accepted
 
@@ -46,6 +48,8 @@ class ProfilingObserver(Observer):
         self._compiles_n = 0
         self._mblocks_n = 0
         self._miters_n = 0
+        self._pblocks_n = 0
+        self._piters_n = 0
         self._spec_p_n = 0
         self._spec_a_n = 0
         self._disp_n: Dict[str, int] = {}
@@ -64,6 +68,12 @@ class ProfilingObserver(Observer):
         r.counter("engine_multi_step_iters_total",
                   "decode iterations inside fused blocks"
                   ).set_fn(lambda: float(self._miters_n))
+        r.counter("engine_persistent_blocks_total",
+                  "device-resident while_loop decode blocks"
+                  ).set_fn(lambda: float(self._pblocks_n))
+        r.counter("engine_persistent_iters_total",
+                  "decode iterations executed inside the device loop"
+                  ).set_fn(lambda: float(self._piters_n))
         r.counter("engine_spec_proposed_total",
                   "speculative tokens drafted"
                   ).set_fn(lambda: float(self._spec_p_n))
@@ -98,6 +108,10 @@ class ProfilingObserver(Observer):
         self._mblocks_n += 1
         self._miters_n += j
 
+    def persistent_loop(self, t, j, steps, *, replica=-1):
+        self._pblocks_n += 1
+        self._piters_n += steps
+
     def spec(self, t, proposed, accepted, *, replica=-1):
         self._spec_p_n += proposed
         self._spec_a_n += accepted
@@ -119,6 +133,8 @@ class ProfilingObserver(Observer):
             "jit_compiles": self._compiles_n,
             "multi_step_blocks": self._mblocks_n,
             "multi_step_iters": self._miters_n,
+            "persistent_blocks": self._pblocks_n,
+            "persistent_iters": self._piters_n,
             "spec_proposed": self._spec_p_n,
             "spec_accepted": self._spec_a_n,
         }

@@ -161,6 +161,57 @@ heavy-tail trace through them):
   legacy fixed-depth manager bit-for-bit; ``page_size=1`` reproduces
   token-granular admission exactly (both pinned differentially in
   tests/test_paged_kv.py).
+
+Physical paging + persistent decode loop
+----------------------------------------
+Two device-side follow-ons lift PR 8's host-side accounting onto the
+accelerator (``tests/test_physical_paging.py`` / ``test_persistent_loop.py``):
+
+* **Physical page pool** (``physical_pages``; auto-ON for paged,
+  non-speculative engines over archs whose decode state is pure
+  length-gated attention KV — ``cache_lib.supports_physical_paging``):
+  the device cache becomes the pool layout of
+  ``models/cache.py:init_paged_cache`` — ``k``/``v`` hold
+  ``KVSlotManager.total_pages`` physical pages shared by all slots, and
+  a ``block_tables`` leaf maps each slot's context onto the pages its
+  manager-side block table names. The manager is now the ALLOCATOR, not
+  just the accountant: ``evict_tail``/release free real HBM rows and
+  admission capacity IS the physical pool. Decode routes through the
+  pallas paged-attention kernel (kernels/paged_attention.py; gather
+  resolved at DMA-issue time via scalar-prefetched tables), prefill
+  commits scatter through ``paged_write_tokens``, and swap-out gathers
+  a slot's pages back into one contiguous host row (identical bytes to
+  the fixed-row slice, so swap accounting and the tolerance fingerprints
+  carry over unchanged). Device tables re-upload lazily: the manager
+  bumps a ``version`` on every page movement and the engine re-pins
+  ``block_tables`` (pure data, no recompile) only when it changed.
+  Every emitted token and timestamp is bit-identical to the
+  accounting-only engine — the paged kernel's masked tiles contribute
+  exact zeros — pinned at ``page_size=1`` and ``page_size >= max_seq``
+  (the degenerate oracles) and at interior page sizes, both preemption
+  modes. Because overdraft page ids name no physical row, the physical
+  engine *pre-reserves* (``ensure_pages``) every page a decode block can
+  write before dispatching and raises if the pool is exhausted — the
+  scheduler watermark keeps certified demand under capacity, so this
+  fires only on a genuinely over-admitting policy.
+
+* **Persistent device decode loop** (``HotpathConfig.persistent``): the
+  multi-step scan becomes a device-resident ``lax.while_loop``
+  (``Model.decode_persistent``) whose iteration bound j is a *dynamic*
+  scalar — ``Scheduler.idle_steps`` is the "how long may the device run
+  unsupervised" certificate, and the loop runs until it expires or every
+  live row hits EOS, committing the whole block off ONE host sync.
+  Dynamic j means no power-of-two quantization (one compile per out-
+  buffer depth serves every block size), so blocks are longer and host
+  syncs strictly fewer than the PR 5 scan on the same trace, while the
+  committed region replays the scan bit-for-bit (the while body IS the
+  scan body; rows past the certificate are discarded by the length
+  gate). With ``wall_multi_step`` a wall-clock engine (the HTTP server
+  pump) runs j-step blocks too: emissions are paced per-step by `_tick`
+  as always, and a mid-block check breaks the commit early when a
+  pending arrival lands so admission latency stays one iteration, not j
+  — timestamps there are tolerance-gated (serving/tolerance.py), token
+  text identical.
 """
 from __future__ import annotations
 
@@ -194,6 +245,12 @@ class HotpathConfig:
     bucket_min: int = 16            # smallest prompt-length bucket
     fused_sampling: bool = True     # on-device argmax (+ spec accept scan)
     multi_step: int = 8             # max decode iters per dispatch (1 = off)
+    persistent: bool = True         # fused blocks via the device-resident
+                                    # while_loop (dynamic, unquantized j)
+                                    # instead of the static-j scan
+    wall_multi_step: bool = True    # let wall-clock engines run fused
+                                    # blocks (length-rollback archs only;
+                                    # timestamps tolerance-gated)
 
     @staticmethod
     def baseline() -> "HotpathConfig":
@@ -238,6 +295,34 @@ def _read_slot(cache, slot):
         ax = _slot_axis(c.ndim)
         return jax.lax.index_in_dim(c, slot, ax, keepdims=True)
     return jax.tree.map(rd, cache)
+
+
+@jax.jit
+def _paged_commit(cache, bt_rows, starts, k_seg, v_seg, counts):
+    """Scatter contiguous k/v token segments into the physical page pool
+    (the paged image of `_write_slots`): row i of the segs holds
+    `counts[i]` tokens landing at absolute positions starts[i].. through
+    the pages named by bt_rows[i]. Sentinel-routed positions drop, so
+    padding rows (all-sentinel table row, count 0) are free."""
+    return dict(
+        cache,
+        k=cache_lib.paged_write_tokens(
+            cache["k"], bt_rows, starts, k_seg, counts),
+        v=cache_lib.paged_write_tokens(
+            cache["v"], bt_rows, starts, v_seg, counts),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("max_seq",))
+def _paged_read_row(cache, table_row, slot, *, max_seq):
+    """Gather one slot's pages back into a contiguous cache row — the
+    paged image of `_read_slot`, same leaf shapes/bytes, so swap
+    accounting and restore are layout-blind."""
+    return {
+        "length": cache["length"][slot][None],
+        "k": cache_lib.paged_gather_rows(cache["k"], table_row, max_seq),
+        "v": cache_lib.paged_gather_rows(cache["v"], table_row, max_seq),
+    }
 
 
 class BucketedPrefill:
@@ -304,7 +389,7 @@ class BucketedPrefill:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
 
     def prefill_into(self, params, cache, slots, toks_list,
-                     frames_list=None, *, need_first=True):
+                     frames_list=None, *, need_first=True, write=None):
         """Grouped flush: prefill every (slot, tokens) pair and scatter the
         rows into `cache` — one padded multi-row call + one fused
         `_write_slots` per bucket group (grouping BY BUCKET keeps each
@@ -314,7 +399,11 @@ class BucketedPrefill:
         int32 aligned with the inputs — zeros when need_first=False,
         which also skips the device→host fetch — the number of
         device→host sync rounds performed, and the number of bucket
-        groups dispatched)."""
+        groups dispatched). `write` overrides the slot-row scatter (the
+        physically paged engine passes its page-pool committer; rows map
+        to slots via the same padded (N,) id array, sentinel=num_slots)."""
+        if write is None:
+            write = lambda c, s, pad: _write_slots(c, s, jnp.asarray(pad))
         groups: dict = {}
         for i, t in enumerate(toks_list):
             groups.setdefault(self.bucket(len(t)), []).append(i)
@@ -330,7 +419,7 @@ class BucketedPrefill:
             rows = src["length"].shape[0]
             pad = np.full((rows,), oob, np.int32)
             pad[: len(idxs)] = [slots[i] for i in idxs]
-            cache = _write_slots(cache, src, jnp.asarray(pad))
+            cache = write(cache, src, pad)
             if need_first:
                 first = np.asarray(first)
                 syncs += 1
@@ -415,6 +504,7 @@ class ServingEngine:
         hotpath: Optional[HotpathConfig] = None,
         prefill_chunk: int = 0,
         page_size: Optional[int] = None,
+        physical_pages: Optional[bool] = None,
     ):
         self.model = model
         self.params = params
@@ -463,17 +553,60 @@ class ServingEngine:
             )
             self._verify = jax.jit(model.verify_step)
             self._spec_fused = self._make_spec_fused()
+            self._spec_block = self._make_spec_block()
         else:
             self.draft = None
 
-        self.cache = model.init_cache(
-            num_slots, self._cache_seq, enc_seq=model.enc_seq(max_seq),
-            dtype=cache_dtype
-        )
+        # ---- physical paging (PR 10): real device page pool ------------
+        # page-granular *accounting* (PR 8) is `paged`; backing the block
+        # tables with a physical pool is opt-in by capability: any paged,
+        # non-speculative engine whose model family supports it (dense/
+        # vlm/moe — the cache is a plain k/v pytree). `physical_pages`
+        # overrides: True forces it (raising when unsupported, so callers
+        # cannot silently fall back to accounting-only), False forces the
+        # contiguous cache (the accounting-only differential baseline).
+        paged = page_size is not None and 0 < int(page_size) < max_seq
+        if physical_pages is None:
+            physical_pages = (paged and not self.spec_k
+                              and model.supports_physical_paging())
+        elif physical_pages:
+            if not paged:
+                raise ValueError(
+                    "physical_pages=True requires a paged engine "
+                    "(0 < page_size < max_seq)")
+            if self.spec_k:
+                raise ValueError(
+                    "physical_pages=True is incompatible with speculative "
+                    "decoding (verify windows write past the block table)")
+            if not model.supports_physical_paging():
+                raise ValueError(
+                    f"model kind {model.cfg.kind!r} does not support a "
+                    "physically paged KV cache")
+        self.physical_pages = bool(physical_pages)
+        if self.physical_pages:
+            # pool geometry mirrors KVSlotManager exactly: the physical
+            # pool IS the admission capacity — every page id the manager
+            # hands out names a real device row
+            cap_tokens = capacity_tokens or num_slots * max_seq
+            self._pool_pages = -(-cap_tokens // page_size)
+            self._max_pages = -(-self._cache_seq // page_size)
+            self.cache = model.init_paged_cache(
+                num_slots, self._pool_pages, page_size, self._cache_seq,
+                dtype=cache_dtype,
+            )
+        else:
+            self._pool_pages = 0
+            self._max_pages = 0
+            self.cache = model.init_cache(
+                num_slots, self._cache_seq, enc_seq=model.enc_seq(max_seq),
+                dtype=cache_dtype
+            )
         self._decode = jax.jit(model.decode_step)
         self._decode_tok = jax.jit(model.decode_tokens)
         self._decode_multi = jax.jit(model.decode_multi,
                                      static_argnames=("j",))
+        self._decode_persist = jax.jit(model.decode_persistent,
+                                       static_argnames=("j_cap", "eos_id"))
         self._prefill = BucketedPrefill(
             model, self._cache_seq, cache_dtype, max_seq=max_seq,
             bucket_min=self.hotpath.bucket_min,
@@ -541,6 +674,15 @@ class ServingEngine:
         self.dispatches = 0                  # device computation launches
         self.multi_step_blocks = 0           # fused multi-iteration dispatches
         self.multi_step_iters = 0            # iterations committed by them
+        self.persistent_blocks = 0           # of which: device while_loop blocks
+        self.persistent_iters = 0            # device loop iterations executed
+        self.page_gathers = 0                # pool→contiguous row gathers (swap)
+        self.page_scatters = 0               # contiguous→pool scatters (commits)
+        self.page_gather_bytes = 0           # bytes moved by those gathers
+        # device block tables are re-uploaded lazily: only when the page
+        # assignment edition (kv.version) moved since the last upload
+        self._kv_version_seen = -1
+        self._bt_host = None
         self._wall0 = time.monotonic()
 
     # ------------------------------------------------------------ observers
@@ -600,6 +742,75 @@ class ServingEngine:
             self.dispatches += n
             if self.obs is not None:
                 self.obs.dispatch(self.now, kind, n)
+
+    # ------------------------------------------------------ physical paging
+    def _refresh_block_tables(self) -> None:
+        """Re-pin the device block tables to the manager's current page
+        assignment — a no-op unless pages moved since the last upload
+        (kv.version gates it), so steady-state decode re-uploads nothing.
+
+        The host mirror has num_slots+1 rows: row `slot` holds that slot's
+        table (sentinel = pool size past its end — scatters drop, gathers
+        clamp under the length mask), and the extra all-sentinel last row
+        is the scatter target for padding rows in grouped prefills. Rows
+        of slots that do not currently own a table are all-sentinel too,
+        so a garbage decode write from an inactive batch lane drops
+        instead of landing in a page some other slot now owns.
+
+        Raises RuntimeError on overdraft ids (>= pool size): in physical
+        mode those name no device row, and clamping them would alias a
+        real page. The admission watermark (policies/andes.py) keeps a
+        certified engine below the pool, so this firing means the policy
+        overcommitted physical memory."""
+        if not self.physical_pages or self.kv.version == self._kv_version_seen:
+            return
+        P = self._pool_pages
+        bt = np.full((self.kv.num_slots + 1, self._max_pages), P, np.int32)
+        for rid, table in self.kv.block_table.items():
+            slot = self.kv.slot_of.get(rid)
+            if slot is None:
+                continue
+            if table and max(table) >= P:
+                raise RuntimeError(
+                    f"physical page pool overdrawn (page id {max(table)} "
+                    f">= pool size {P}): the scheduler admitted more "
+                    "context than the device pool holds")
+            if len(table) > self._max_pages:
+                raise RuntimeError(
+                    f"request {rid} holds {len(table)} pages but a slot "
+                    f"spans at most {self._max_pages} "
+                    f"(max_seq={self.max_seq}): its prompt_len + "
+                    "output_len exceeds the engine's context budget — the "
+                    "contiguous layout silently clamps such overflow "
+                    "writes; the physical pool refuses it")
+            bt[slot, : len(table)] = table
+        self._bt_host = bt
+        self.cache = cache_lib.with_block_tables(self.cache, bt[:-1])
+        self._kv_version_seen = self.kv.version
+
+    def _paged_writer(self, cache, src, pad):
+        """Scatter a contiguous prefill result `src` (rows of k/v planes
+        plus lengths) into the page pool — the paged image of
+        `_write_slots`. `pad` maps rows to slots exactly as the contiguous
+        path's scatter does (sentinel = num_slots → the all-sentinel extra
+        block-table row → every write drops). Chunked prefill recomputes
+        the whole prefix each chunk, so starts are always 0 and counts the
+        committed length."""
+        rows = np.asarray(pad, np.int32)
+        bt_rows = jnp.asarray(self._bt_host[rows])
+        # counts = length + 1: the contiguous path writes the FULL padded
+        # row, and the one junk position a fresh request ever attends is
+        # index `prompt` (its first emitted token's KV is never written —
+        # the decode window reaches it from the first iteration on). The
+        # +1 copies that position's contiguous content; rows whose page
+        # coverage stops at `length` (recompute resumes) route it to the
+        # sentinel and drop, exactly where the extra position is
+        # overwritten in-step by the next decode anyway.
+        counts = src["length"].astype(jnp.int32) + 1
+        starts = jnp.zeros_like(counts)
+        self.page_scatters += 1
+        return _paged_commit(cache, bt_rows, starts,
+                             src["k"], src["v"], counts)
 
     def submit(self, req: Request) -> None:
         """Enqueue an arrival. Stable insert keeps equal-arrival order
@@ -681,6 +892,11 @@ class ServingEngine:
             "prefill_bucket_grid": list(self._prefill.buckets),
             "multi_step_blocks": self.multi_step_blocks,
             "multi_step_iters": self.multi_step_iters,
+            "persistent_blocks": self.persistent_blocks,
+            "persistent_iters": self.persistent_iters,
+            "page_gathers": self.page_gathers,
+            "page_scatters": self.page_scatters,
+            "page_gather_bytes": self.page_gather_bytes,
         }
 
     # ---------------------------------------------------------------- clock
@@ -816,11 +1032,18 @@ class ServingEngine:
         sequential path produces."""
         if not staged:
             return
+        writer = None
+        if self.physical_pages:
+            # staging allocated/grew pages — pin the moved tables before
+            # the grouped scatter lands in them
+            self._refresh_block_tables()
+            writer = self._paged_writer
         slots = [rec.slot for rec in staged]
         self.cache, first, syncs, n_groups = self._prefill.prefill_into(
             self.params, self.cache, slots,
             [rec.toks for rec in staged],
             [rec.frames for rec in staged],
+            write=writer,
         )
         self._sync(syncs)
         self._dispatch("prefill", n_groups)
@@ -881,7 +1104,24 @@ class ServingEngine:
         self._prefill.note_shape((1, len(toks)))        # exact-length compile
         self._dispatch("prefill")
         slot = self.kv.allocate(r)
-        self.cache = _write_slot(self.cache, one, slot)
+        if self.physical_pages:
+            if r.generated == 0:
+                # own the page under position len(toks) now: the first
+                # emitted token's KV never lands there, so the decode
+                # window reads whatever this scatter leaves (zeros from
+                # the scratch row — the contiguous path's content). The
+                # emit below re-counts the token; grow is idempotent on
+                # the already-taken page.
+                self.kv.ensure_pages(r, len(toks) + 1)
+            self._refresh_block_tables()
+            self.page_scatters += 1
+            self.cache = _paged_commit(
+                self.cache, jnp.asarray(self._bt_host[[slot]]),
+                jnp.zeros((1,), jnp.int32), one["k"], one["v"],
+                jnp.asarray([len(toks) + 1], jnp.int32),
+            )
+        else:
+            self.cache = _write_slot(self.cache, one, slot)
         self._dispatch("write")
         self.slot_req[slot] = r
         if self.spec_k:
@@ -962,7 +1202,19 @@ class ServingEngine:
         slot = r.engine_slot
         if self.preemption_mode == "swap":
             self._dispatch("read")
-            host_slice = jax.device_get(_read_slot(self.cache, slot))
+            if self.physical_pages:
+                # gather the victim's pages into a contiguous host row —
+                # identical leaf shapes/bytes to the `_read_slot` slice,
+                # so swap accounting and the restore path are layout-blind
+                self._refresh_block_tables()
+                host_slice = jax.device_get(_paged_read_row(
+                    self.cache, jnp.asarray(self._bt_host[[slot]]), slot,
+                    max_seq=self._cache_seq))
+                self.page_gathers += 1
+                self.page_gather_bytes += sum(
+                    v.nbytes for k, v in host_slice.items() if k != "length")
+            else:
+                host_slice = jax.device_get(_read_slot(self.cache, slot))
             self._sync()
             draft_slice = self.draft.park(slot) if self.spec_k else None
             self.kv.swap_out(r, host_slice, draft_slice)
@@ -985,9 +1237,23 @@ class ServingEngine:
         host_slice = self.kv.swap_in(r)
         draft_slice = self.kv.swap_in_draft(r)
         slot = self.kv.allocate(r, tokens=(r.prefill_cursor or None))
-        self.cache = _write_slot(
-            self.cache, jax.tree.map(jnp.asarray, host_slice), slot
-        )
+        if self.physical_pages:
+            # scatter the parked contiguous row into the freshly allocated
+            # pages; counts = the committed context (mid-chunk victims
+            # restore their cursor's prefix), exactly the page coverage
+            # `allocate` just took
+            self._refresh_block_tables()
+            self.page_scatters += 1
+            self.cache = _paged_commit(
+                self.cache, jnp.asarray(self._bt_host[[slot]]),
+                jnp.zeros((1,), jnp.int32),
+                jnp.asarray(host_slice["k"]), jnp.asarray(host_slice["v"]),
+                jnp.asarray([r.prefill_cursor or r.context_len], jnp.int32),
+            )
+        else:
+            self.cache = _write_slot(
+                self.cache, jax.tree.map(jnp.asarray, host_slice), slot
+            )
         self._dispatch("write")
         if draft_slice is not None:
             self.draft.restore(slot, draft_slice)
@@ -1022,6 +1288,169 @@ class ServingEngine:
             return window, greedy, accepted, target_cache, draft_cache
 
         return jax.jit(fn)
+
+    def _make_spec_block(self):
+        """`_make_spec_fused`'s round, folded into a device-resident
+        `lax.while_loop` over `s` verify rounds (multi-step INSIDE
+        speculation; s is loop data, bounded by the static buffer cap).
+        Each round re-pins both caches' length gates exactly as the host
+        does between single rounds — the target's valid prefix is the
+        committed context, the draft holds committed[:-1] (speculative.py
+        invariant) — then advances the committed length by accepted+1 and
+        feeds the correction/bonus token to the next round's draft. The
+        host replays the per-round windows off ONE sync."""
+        model, k = self.model, self.spec_k
+        dmodel = self.draft.model
+
+        def fn(params, dparams, tokens, lengths, tcache, dcache, s, *,
+               s_cap):
+            b = tokens.shape[0]
+
+            def cond(c):
+                return c[0] < s
+
+            def body(c):
+                r, tok, ln, tc, dc, W, G, A = c
+                dc = dict(dc, length=jnp.maximum(ln - 1, 0))
+                tc = dict(tc, length=ln)
+                props, dc = dmodel.propose_step(dparams, tok, dc, k)
+                window = jnp.concatenate([tok[:, None], props[:, :k]],
+                                         axis=1)
+                logits, tc = model.verify_step(params, window, tc)
+                greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                match = (window[:, 1:] == greedy[:, :k]).astype(jnp.int32)
+                accepted = jnp.sum(jnp.cumprod(match, axis=1), axis=1)
+                nxt = jnp.take_along_axis(greedy, accepted[:, None],
+                                          axis=1)[:, 0]
+                return (r + 1, nxt, ln + accepted + 1, tc, dc,
+                        W.at[r].set(window), G.at[r].set(greedy),
+                        A.at[r].set(accepted))
+
+            carry = (jnp.asarray(0, jnp.int32), tokens, lengths, tcache,
+                     dcache,
+                     jnp.zeros((s_cap, b, k + 1), jnp.int32),
+                     jnp.zeros((s_cap, b, k + 1), jnp.int32),
+                     jnp.zeros((s_cap, b), jnp.int32))
+            c = jax.lax.while_loop(cond, body, carry)
+            return c[5], c[6], c[7], c[3], c[4]
+
+        return jax.jit(fn, static_argnames=("s_cap",))
+
+    def _spec_block_plan(self, active) -> int:
+        """Rounds of speculative verify that may run unsupervised in one
+        device dispatch — the decode `_multi_step_plan` adapted to an
+        acceptance-dependent clock. A round commits 1..k+1 tokens per
+        slot, so the `idle_steps` certificate is spent in TOKENS (one
+        round consumes up to k+1 of them) and the block is sized so
+        neither output_len nor max_seq can truncate mid-block: what gets
+        committed then depends on acceptance alone (EOS still truncates —
+        the replay discards the tail and the length gates roll both
+        caches back). The arrival/`until` bound is NOT precomputed here:
+        round ticks depend on accepted context, so the commit replay
+        breaks at the first crossing instead. Returns 1 when any
+        condition fails."""
+        cap = self.hotpath.multi_step
+        if cap <= 1 or not self.hotpath.persistent:
+            return 1
+        if not self.hotpath.fused_sampling:
+            return 1
+        if self.clock != "virtual" and not self.hotpath.wall_multi_step:
+            return 1
+        if len(active) != len(self.live):
+            return 1
+        if not self._rollback_ok:
+            return 1                    # discarded tails need the gate
+        k1 = self.spec_k + 1
+        s_max = min(
+            cap,
+            min((r.output_len - r.generated) // k1
+                for r in active.values()),
+            min((self.max_seq - r.context_len) // k1
+                for r in active.values()),
+        )
+        if s_max < 2:
+            return 1
+        # the acceptance-dependent clock, folded into the certificate:
+        # `idle_steps` projects the latency trigger at the CURRENT
+        # acceptance EMA, but commits inside the block move the EMA — so
+        # re-check the trigger at the EMA floor (expected_step_tokens→1,
+        # i.e. per-token latency = full iter latency), which dominates
+        # every acceptance trajectory the block can observe
+        stiffest = max((r.spec.tds for r in active.values()), default=0.0)
+        if stiffest > 0 and \
+                self.lat.iter_latency(len(self.live)) > 1.0 / stiffest:
+            return 1
+        s_tok = self.sched.idle_steps(self.live, s_max * k1 - 1) + 1
+        s_max = min(s_max, s_tok // k1)
+        return s_max if s_max >= 2 else 1
+
+    def _speculative_block(self, active, lengths, tokens, s: int,
+                           until: Optional[float]) -> int:
+        """Run up to `s` speculative verify rounds in one device-resident
+        while_loop dispatch and replay the acceptance-dependent clock on
+        the host off ONE sync: round r's tick is priced at the context the
+        ledger reached after round r-1's commits — exactly the sequence
+        single-round stepping produces. Returns rounds committed (< s when
+        an EOS landed, a pending arrival came due, or the driver's `until`
+        was crossed: the tail is discarded and both length gates roll the
+        caches back)."""
+        k = self.spec_k
+        draft_lengths = np.maximum(lengths - 1, 0).astype(np.int32)
+        self.draft.cache = cache_lib.with_lengths(
+            self.draft.cache, draft_lengths
+        )
+        W, G, A, self.cache, self.draft.cache = self._spec_block(
+            self.params, self.draft.params, jnp.asarray(tokens),
+            jnp.asarray(lengths), self.cache, self.draft.cache,
+            jnp.int32(s), s_cap=self.hotpath.multi_step)
+        self._dispatch("spec_block")
+        W, G, A = jax.device_get((W, G, A))     # ONE sync for s rounds
+        self._sync()
+        self.multi_step_blocks += 1
+        self.persistent_blocks += 1
+        items = list(active.items())
+        b = len(items)
+        committed = 0
+        for rnd in range(s):
+            if rnd:
+                self.batch_sizes.append(b)
+            ctx = sum(r.context_len for _slot, r in items)
+            self._tick(self.lat.iter_latency(b, ctx))
+            step_accepted = 0
+            finished = False
+            for slot, r in items:
+                d, g = W[rnd, slot, 1:], G[rnd, slot]
+                a = int(A[rnd, slot])
+                m_safe = max(1, self.max_seq - r.context_len)
+                toks = (list(d[:a]) + [int(g[a])])[:m_safe]
+                self.spec_steps += 1
+                self.spec_proposed += k
+                self.spec_accepted += a
+                step_accepted += a
+                if hasattr(self.lat, "observe_acceptance"):
+                    self.lat.observe_acceptance(a)
+                self._emit_burst(r, toks)
+                finished = finished or not r.is_live
+            if self.obs is not None:
+                self.obs.spec(self.now, k * b, step_accepted)
+            committed += 1
+            if committed < s:
+                if finished:
+                    break   # batch composition changes next round
+                if (self._pending_pos < len(self._pending)
+                        and self._pending[self._pending_pos].arrival
+                        <= self.now):
+                    break   # an arrival is waiting — the scheduler must
+                            # see it at this iteration boundary
+                if until is not None and not (self.now < until):
+                    break   # incremental driver regains control
+        self.multi_step_iters += committed
+        self.persistent_iters += s
+        self.sched.skip_iterations(committed - 1)
+        if self.obs is not None:
+            self.obs.multi_step(self.now, s, committed)
+            self.obs.persistent_loop(self.now, s, s)
+        return committed
 
     def _speculative_iteration(self, active, lengths, tokens,
                                total_ctx: int) -> None:
@@ -1104,7 +1533,15 @@ class ServingEngine:
         single-stepping — see the module docstring for the full invariant.
         Returns 1 whenever any condition fails."""
         cap = self.hotpath.multi_step
-        if cap <= 1 or self.spec_k or self.clock != "virtual":
+        if cap <= 1 or self.spec_k:
+            return 1
+        if self.clock != "virtual" and not (
+                self.hotpath.wall_multi_step and self._rollback_ok):
+            # wall-clock engines may fuse only when a mid-block arrival
+            # can be honored by rolling back the uncommitted tail —
+            # length-gated caches only (timestamps are tolerance-gated;
+            # token ids stay exact either way: greedy decode rows are
+            # batch-independent)
             return 1
         if len(active) != len(self.live):
             return 1                    # a waiting/swapped request needs
@@ -1143,23 +1580,21 @@ class ServingEngine:
             j = j_max
         if j < 2:
             return 1
+        if self.hotpath.persistent:
+            # the device while_loop takes j as DATA — no compile grid, so
+            # the certificate is spent at full, unquantized resolution
+            return j
         return 1 << (j.bit_length() - 1)        # pow-2 compile grid
 
-    def _multi_step_decode(self, active, tokens, total_ctx: int,
-                           j: int) -> int:
-        """Run j fused decode iterations and commit their tokens with the
-        exact per-step clock/fluid bookkeeping the one-step loop performs
-        (same `iter_latency` tick sequence — context grows by B per step —
-        same per-slot emit order). Returns iterations committed (< j only
-        when an EOS landed mid-block: the remainder is discarded and the
-        length gate rolls the cache back)."""
-        ids, self.cache = self._decode_multi(
-            self.params, jnp.asarray(tokens), self.cache, j=j
-        )
-        self._dispatch("decode_multi")
-        ids = np.asarray(ids)                   # ONE sync for j iterations
-        self._sync()
-        self.multi_step_blocks += 1
+    def _commit_block(self, active, ids, total_ctx: int, j: int) -> int:
+        """Replay a fused block's per-step bookkeeping exactly as the
+        one-step loop performs it (same `iter_latency` tick sequence —
+        context grows by B per step — same per-slot emit order). Returns
+        iterations committed (< j when an EOS landed mid-block — the
+        remainder is discarded and the length gate rolls the cache back —
+        or, on a wall clock, when a pending arrival came due mid-block:
+        the tail is dropped the same way so admission lands at the next
+        iteration boundary)."""
         items = list(active.items())
         b = len(items)
         ticks = self.lat.iter_latency_schedule(b, total_ctx, j)
@@ -1173,13 +1608,67 @@ class ServingEngine:
                 self._emit(r, int(ids[s, slot]))
                 finished = finished or not r.is_live
             committed += 1
-            if finished and committed < j:
-                break       # batch composition changes next iteration;
+            if committed < j:
+                if finished:
+                    break   # batch composition changes next iteration;
                             # drop the overshoot (length-gate rollback)
+                if (self.clock != "virtual"
+                        and self._pending_pos < len(self._pending)
+                        and self._pending[self._pending_pos].arrival
+                        <= self.now):
+                    break   # wall mode: an arrival is waiting — stop the
+                            # block so the scheduler sees it now
+        return committed
+
+    def _multi_step_decode(self, active, tokens, total_ctx: int,
+                           j: int) -> int:
+        """Run j fused decode iterations (static-j scan) and commit with
+        `_commit_block` — ONE device→host sync for the whole block."""
+        ids, self.cache = self._decode_multi(
+            self.params, jnp.asarray(tokens), self.cache, j=j
+        )
+        self._dispatch("decode_multi")
+        ids = np.asarray(ids)                   # ONE sync for j iterations
+        self._sync()
+        self.multi_step_blocks += 1
+        committed = self._commit_block(active, ids, total_ctx, j)
         self.multi_step_iters += committed
         self.sched.skip_iterations(committed - 1)
         if self.obs is not None:
             self.obs.multi_step(self.now, j, committed)
+        return committed
+
+    def _persistent_decode(self, active, tokens, total_ctx: int,
+                           j: int) -> int:
+        """Run up to j decode iterations in the device-resident
+        `lax.while_loop` (models/model.py `decode_persistent`): j is data,
+        not a compile-time constant, and EOS-enabled engines stop the
+        device early once every active row has emitted its EOS. The
+        scheduler's `idle_steps` certificate (core/policies/base.py) is
+        what makes running that long unsupervised legal; the commit
+        replay is the same `_commit_block` the scan path uses, so the
+        persistent path inherits every bit-identity the scan proved."""
+        act = np.zeros(self.kv.num_slots, bool)
+        for s in active:
+            act[s] = True
+        ids, self.cache, steps = self._decode_persist(
+            self.params, jnp.asarray(tokens), self.cache,
+            jnp.int32(j), jnp.asarray(act),
+            j_cap=self.hotpath.multi_step, eos_id=self.eos_id,
+        )
+        self._dispatch("decode_persistent")
+        ids, steps = jax.device_get((ids, steps))   # ONE sync for the block
+        self._sync()
+        self.multi_step_blocks += 1
+        self.persistent_blocks += 1
+        committed = self._commit_block(active, np.asarray(ids),
+                                       total_ctx, j)
+        self.multi_step_iters += committed
+        self.persistent_iters += int(steps)
+        self.sched.skip_iterations(committed - 1)
+        if self.obs is not None:
+            self.obs.multi_step(self.now, j, committed)
+            self.obs.persistent_loop(self.now, j, int(steps))
         return committed
 
     # ----------------------------------------------------------- main loop
@@ -1293,14 +1782,43 @@ class ServingEngine:
             self.cache = cache_lib.with_lengths(self.cache, lengths)
             total_ctx = int(lengths.sum())
             if self.spec_k:
-                self._speculative_iteration(active, lengths, tokens,
-                                            total_ctx)
+                s_rounds = self._spec_block_plan(active)
+                if s_rounds > 1:
+                    committed_iters = self._speculative_block(
+                        active, lengths, tokens, s_rounds, until
+                    )
+                else:
+                    self._speculative_iteration(active, lengths, tokens,
+                                                total_ctx)
             else:
                 j = self._multi_step_plan(active, total_ctx, until)
+                if self.physical_pages:
+                    # pre-reserve every page the block will write (decode
+                    # step s writes position ctx+s): no host round-trip
+                    # can grow a table mid-block, so the whole block's
+                    # coverage must exist before dispatch. The scheduler's
+                    # paged idle_steps projection certified the demand
+                    # fits the pool. Pin the tables after.
+                    for _s, r in active.items():
+                        self.kv.ensure_pages(
+                            r, min(r.context_len + j, self._cache_seq))
+                    self._refresh_block_tables()
                 if j > 1:
-                    committed_iters = self._multi_step_decode(
-                        active, tokens, total_ctx, j
-                    )
+                    if self.hotpath.persistent:
+                        committed_iters = self._persistent_decode(
+                            active, tokens, total_ctx, j
+                        )
+                    else:
+                        committed_iters = self._multi_step_decode(
+                            active, tokens, total_ctx, j
+                        )
+                    if self.physical_pages:
+                        # EOS truncation / mid-block break may leave pages
+                        # reserved past the committed context — return
+                        # them to the pool (admission capacity is real now)
+                        for r in list(active.values()):
+                            if r.is_live:
+                                self.kv.trim_pages(r)
                 elif self.hotpath.fused_sampling:
                     ids, self.cache = self._decode_tok(
                         self.params, jnp.asarray(tokens), self.cache

@@ -91,6 +91,11 @@ class KVSlotManager:
         high-water mark and swap accounting, which a fresh run must not
         inherit). In-place so external references — observability gauges
         bound to an engine's `kv` — stay valid across `engine.reset()`."""
+        # monotone edition counter of the page/slot assignment: bumped on
+        # every page movement (take/free) and on reset, so a physically
+        # paged engine can cheaply detect "tables moved, re-upload the
+        # device block tables" without diffing them
+        self.version = getattr(self, "version", 0) + 1
         self.free_slots: List[int] = list(range(self.num_slots))
         self.slot_of: Dict[int, int] = {}          # rid -> slot
         self.tokens_used = 0
@@ -104,6 +109,11 @@ class KVSlotManager:
             list(range(self.total_pages - 1, -1, -1)) if self.paged else [])
         self.pages_used = 0
         self.peak_pages_used = 0
+        # overdraft pages (ids >= total_pages) are ledger fictions — they
+        # name no row of a physical pool, so the physical_* reporting
+        # surface excludes them (pages_used keeps counting them: that is
+        # the visible overdraft signal)
+        self.overdraft_pages = 0
         # preemption accounting: swap_out moves bytes (DMA priced by the
         # LatencyModel); drop discards — both are visible, per mode
         self.swap_bytes_total = 0
@@ -139,6 +149,9 @@ class KVSlotManager:
             "peak_pages_used": self.peak_pages_used,
             "total_pages": self.total_pages,
             "page_utilization": self.page_utilization,
+            "physical_pages_used": self.physical_pages_used,
+            "physical_page_utilization": self.physical_page_utilization,
+            "overdraft_pages": self.overdraft_pages,
             "swapped_requests": len(self.host_store),
             "swap_bytes_total": self.swap_bytes_total,
             "swaps_out_total": self.swaps_out_total,
@@ -185,8 +198,12 @@ class KVSlotManager:
         # the token ledger the pool tolerates transient overdraft (ids
         # past total_pages) instead of corrupting state — utilization > 1
         # is the visible signal, exactly as tokens_used > capacity is
-        page = (self.free_pages.pop() if self.free_pages
-                else self.total_pages + self.pages_used)
+        if self.free_pages:
+            page = self.free_pages.pop()
+        else:
+            page = self.total_pages + self.pages_used
+            self.overdraft_pages += 1
+        self.version += 1
         self.pages_used += 1
         self.peak_pages_used = max(self.peak_pages_used, self.pages_used)
         return page
@@ -200,9 +217,13 @@ class KVSlotManager:
         keep = self.pages_for(down_to)
         freed = table[keep:]
         del table[keep:]
+        if freed:
+            self.version += 1
         for p in reversed(freed):
             if p < self.total_pages:
                 self.free_pages.append(p)
+            else:
+                self.overdraft_pages -= 1
         self.pages_used -= len(freed)
         if not table:
             self.block_table.pop(rid, None)
@@ -220,6 +241,34 @@ class KVSlotManager:
                 table = self.block_table.setdefault(rid, [])
                 while len(table) < self.pages_for(held):
                     table.append(self._take_page())
+
+    def ensure_pages(self, req: Request, tokens: int) -> int:
+        """Physically pre-extend a resident's block table to cover `tokens`
+        total context WITHOUT touching the token ledger — the physical
+        engine's block pre-reservation: before dispatching a certified
+        j-step decode block it reserves every page the block can write
+        (positions up to tokens-1), so the device loop never needs a
+        host-side `grow` mid-block. `grow`'s page top-up is idempotent
+        against this (it only appends while the table is short), and
+        `trim_pages` returns the unused reserve after the commit (EOS
+        truncation). Returns pages newly taken."""
+        rid = req.rid
+        if not self.paged or rid not in self.slot_of:
+            return 0
+        table = self.block_table.setdefault(rid, [])
+        n0 = len(table)
+        while len(table) < self.pages_for(tokens):
+            table.append(self._take_page())
+        return len(table) - n0
+
+    def trim_pages(self, req: Request) -> int:
+        """Return pre-reserved pages beyond the committed context (the
+        `ensure_pages` reserve a truncated block never wrote) to the pool.
+        Returns pages freed."""
+        held = self.held_tokens.get(req.rid)
+        if held is None:
+            return 0
+        return self._free_pages_of(req.rid, held)
 
     def evict_tail(self, req: Request, down_to_tokens: int) -> int:
         """Partial preemption: shrink a resident's footprint to
@@ -285,6 +334,21 @@ class KVSlotManager:
     @property
     def page_utilization(self) -> float:
         return self.pages_used / self.total_pages if self.paged else 0.0
+
+    @property
+    def physical_pages_used(self) -> int:
+        """Pages of the *physical* pool in use: pages_used minus the
+        overdraft fictions (ids >= total_pages name no device row).
+        This is the figure HBM dashboards must see — at most total_pages
+        — while `page_utilization` keeps reporting > 1 under overdraft."""
+        return self.pages_used - self.overdraft_pages
+
+    @property
+    def physical_page_utilization(self) -> float:
+        """Clamped utilization of the physical pool (always <= 1.0)."""
+        if not self.paged:
+            return 0.0
+        return self.physical_pages_used / self.total_pages
 
     @property
     def peak_utilization(self) -> float:

@@ -167,3 +167,110 @@ def test_scan_step_consistency():
         h, y = ops.selective_scan_step(h, x[:, t], dt[:, t], A, B[:, t], C[:, t], D)
         np.testing.assert_allclose(np.asarray(y), np.asarray(full[:, t]),
                                    atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention (physical page pool)
+# ---------------------------------------------------------------------------
+
+def _paginate(k, v, lengths, page, seed=0):
+    """Scatter contiguous (B, S, KV, hd) caches into a shuffled page pool.
+
+    Returns (k_pool, v_pool, block_tables) with page assignment randomized
+    across requests (physical page order must not matter) and unowned pool
+    rows filled with noise (masking must make them invisible)."""
+    b, s, kvh, hd = k.shape
+    max_pages = -(-s // page)
+    pad = max_pages * page - s
+    kp = np.pad(np.asarray(k, np.float32), ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = np.pad(np.asarray(v, np.float32), ((0, 0), (0, pad), (0, 0), (0, 0)))
+    needed = [-(-int(L) // page) for L in np.asarray(lengths)]
+    p_total = sum(needed) + 3                      # + never-owned noise pages
+    rng = np.random.default_rng(seed)
+    ids = list(rng.permutation(p_total))
+    k_pool = rng.normal(size=(p_total, page, kvh, hd)).astype(np.float32)
+    v_pool = rng.normal(size=(p_total, page, kvh, hd)).astype(np.float32)
+    tables = np.full((b, max_pages), p_total, np.int32)    # sentinel = P
+    for bi in range(b):
+        for pi in range(needed[bi]):
+            pid = ids.pop()
+            tables[bi, pi] = pid
+            k_pool[pid] = kp[bi, pi * page:(pi + 1) * page]
+            v_pool[pid] = vp[bi, pi * page:(pi + 1) * page]
+    dt = k.dtype
+    return (jnp.asarray(k_pool, dt), jnp.asarray(v_pool, dt),
+            jnp.asarray(tables))
+
+
+def test_paged_decode_ref_matches_contiguous_bitwise():
+    """When max_pages * page == S the paged gather rebuilds the exact
+    contiguous view, so the oracle is bit-identical to the contiguous
+    oracle — the property the engine's degenerate page-size differentials
+    stand on."""
+    b, s, h, kv, hd = 3, 64, 4, 2, 32
+    q = rand(0, (b, h, hd), jnp.float32)
+    k = rand(1, (b, s, kv, hd), jnp.float32)
+    v = rand(2, (b, s, kv, hd), jnp.float32)
+    lengths = jnp.array([64, 17, 40], jnp.int32)
+    for page in (1, 8, 16, 64):                    # all divide S
+        k_pool, v_pool, bt = _paginate(k, v, lengths, page, seed=page)
+        out = ref.paged_decode_attention_ref(q, k_pool, v_pool, bt, lengths)
+        expect = ref.decode_attention_ref(q, k, v, lengths)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+@pytest.mark.parametrize("b,s,h,kv,hd,page", [
+    (1, 128, 4, 4, 64, 16),
+    (3, 300, 8, 2, 64, 32),     # ragged lengths + non-divisible S
+    (2, 512, 16, 1, 32, 128),   # MQA deep cache, big pages
+    (2, 64, 4, 2, 64, 8),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_decode_attention_sweep(b, s, h, kv, hd, page, dtype):
+    q = rand(0, (b, h, hd), dtype)
+    k = rand(1, (b, s, kv, hd), dtype)
+    v = rand(2, (b, s, kv, hd), dtype)
+    lengths = jnp.asarray(
+        np.random.default_rng(0).integers(1, s + 1, b), jnp.int32
+    )
+    k_pool, v_pool, bt = _paginate(k, v, lengths, page)
+    from repro.kernels.paged_attention import paged_decode_attention
+    out = paged_decode_attention(q, k_pool, v_pool, bt, lengths,
+                                 interpret=True)
+    expect = ref.decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype],
+    )
+
+
+def test_paged_decode_attention_window():
+    b, s, h, kv, hd, page = 2, 256, 8, 4, 64, 32
+    q = rand(0, (b, h, hd), jnp.float32)
+    k = rand(1, (b, s, kv, hd), jnp.float32)
+    v = rand(2, (b, s, kv, hd), jnp.float32)
+    lengths = jnp.array([256, 100], jnp.int32)
+    k_pool, v_pool, bt = _paginate(k, v, lengths, page)
+    from repro.kernels.paged_attention import paged_decode_attention
+    out = paged_decode_attention(q, k_pool, v_pool, bt, lengths, window=32,
+                                 interpret=True)
+    expect = ref.decode_attention_ref(q, k, v, lengths, window=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=2e-5)
+
+
+def test_paged_decode_ops_dispatch():
+    b, s, h, kv, hd, page = 2, 64, 4, 2, 32, 16
+    q = rand(0, (b, h, hd), jnp.float32)
+    k = rand(1, (b, s, kv, hd), jnp.float32)
+    v = rand(2, (b, s, kv, hd), jnp.float32)
+    lengths = jnp.array([30, 64], jnp.int32)
+    k_pool, v_pool, bt = _paginate(k, v, lengths, page)
+    via_ref = ops.paged_decode_attention(q, k_pool, v_pool, bt, lengths,
+                                         impl="ref")
+    via_pallas = ops.paged_decode_attention(q, k_pool, v_pool, bt, lengths,
+                                            impl="pallas")
+    expect = ref.decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(via_ref), np.asarray(expect),
+                               atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(via_pallas), np.asarray(expect),
+                               atol=2e-5, rtol=2e-5)

@@ -118,6 +118,36 @@ class TestPagedManager:
         assert kv.pages_used == 0
         assert sorted(kv.free_pages) == [0, 1]
 
+    def test_physical_page_reporting_clamps_overdraft(self):
+        """Overdraft page ids (>= total_pages) are bookkeeping fictions —
+        they name no row of the device pool. The *physical* reporting
+        surface must clamp to the pool size (a gauge claiming more rows
+        in use than HBM holds is a lie to capacity dashboards), while the
+        unclamped page_utilization > 1 overdraft signal stays intact."""
+        kv = KVSlotManager(num_slots=4, max_seq=32, capacity_tokens=16,
+                           page_size=8)
+        r0, r1 = mk_req(0, 16), mk_req(1, 16)
+        kv.allocate(r0)
+        kv.allocate(r1)                        # forced past the pool
+        assert kv.page_utilization > 1.0       # overdraft signal preserved
+        assert kv.physical_pages_used == kv.total_pages == 2
+        assert kv.physical_page_utilization == 1.0
+        occ = kv.occupancy()
+        assert occ["physical_pages_used"] == 2
+        assert occ["physical_page_utilization"] == 1.0
+        kv.release(r1)                         # only overdraft pages leave
+        assert kv.physical_pages_used == 2
+        assert kv.physical_page_utilization == 1.0
+        kv.release(r0)
+        assert kv.physical_pages_used == 0
+        assert kv.physical_page_utilization == 0.0
+        # unpaged managers report zero physical pages, like pages_used
+        legacy = KVSlotManager(num_slots=4, max_seq=32, capacity_tokens=256,
+                               page_size=32)
+        assert not legacy.paged
+        assert legacy.physical_pages_used == 0
+        assert legacy.physical_page_utilization == 0.0
+
     def test_page_size_max_seq_is_legacy_path(self):
         kv = KVSlotManager(num_slots=4, max_seq=64, capacity_tokens=256,
                            page_size=64)

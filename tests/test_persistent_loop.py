@@ -1,0 +1,332 @@
+"""Persistent device decode loop (ISSUE 10 tentpole, part b) and the
+wall-clock multi-step relaxation (satellite).
+
+`Model.decode_persistent` folds a whole multi-step block into one
+device-resident `lax.while_loop` whose body is exactly `decode_multi`'s
+scan body — so the identity chain is
+
+    sequential single-step ≡ static-j scan ≡ persistent while_loop
+
+bit-for-bit, on both cache layouts. The engine spends the scheduler's
+`idle_steps` certificate at full resolution (j is loop *data*, no pow-2
+compile grid) and commits the block off ONE host sync through the same
+`_commit_block` replay the scan path uses. Wall-clock engines may now
+fuse too (`HotpathConfig.wall_multi_step`): token ids stay exact — the
+clock decides when, never what — and timestamps are tolerance-gated.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import LatencyModel, QoESpec, SchedulerConfig, TPU_V5E, make_scheduler
+from repro.models import Model
+from repro.serving import (
+    HotpathConfig,
+    Request,
+    ServingEngine,
+    Tolerance,
+    ToleranceSpec,
+    compare_requests,
+    fingerprint,
+)
+
+_MODELS = {}
+
+
+def _model(arch="llama3-8b"):
+    if arch not in _MODELS:
+        cfg = get_smoke_config(arch)
+        m = Model(cfg)
+        _MODELS[arch] = (cfg, m, m.init(jax.random.PRNGKey(0)))
+    return _MODELS[arch]
+
+
+def mk_wl(cfg, rng, n=8, out_len=12, stagger=0.2, plo=6, phi=40):
+    wl = []
+    for i in range(n):
+        plen = int(rng.integers(plo, phi))
+        wl.append(Request(
+            rid=i, arrival=i * stagger, prompt_len=plen, output_len=out_len,
+            spec=QoESpec(ttft=1.0, tds=4.8),
+            prompt_tokens=rng.integers(0, cfg.vocab_size, plen)))
+    return wl
+
+
+def clone(wl):
+    return [r.clone() for r in wl]
+
+
+def mk_engine(arch="llama3-8b", *, hotpath=None, num_slots=8, max_seq=64,
+              cap=None, eos_id=-1, **kw):
+    cfg, m, params = _model(arch)
+    lat = LatencyModel(cfg, TPU_V5E)
+    cap = cap if cap is not None else num_slots * max_seq
+    sched = make_scheduler("andes", cap, lat, SchedulerConfig())
+    return ServingEngine(m, params, sched, lat, num_slots=num_slots,
+                         max_seq=max_seq, capacity_tokens=cap,
+                         eos_id=eos_id, hotpath=hotpath, **kw)
+
+
+def assert_bitforbit(out_a, out_b):
+    assert len(out_a) == len(out_b)
+    for a, b in zip(out_a, out_b):
+        assert a.rid == b.rid
+        assert a.output_tokens == b.output_tokens, a.rid
+        assert a.emit_times == b.emit_times, a.rid
+        assert a.preemptions == b.preemptions, a.rid
+        assert a.generated == b.generated, a.rid
+        assert a.final_qoe() == b.final_qoe(), a.rid
+
+
+# ---------------------------------------------------------------------------
+# model layer: while_loop ≡ scan ≡ single-step
+# ---------------------------------------------------------------------------
+
+def _prefilled_cache(cfg, m, params, B=4, S=48):
+    rng = np.random.default_rng(0)
+    pre = jax.jit(lambda p, t, l, c: m.prefill(
+        p, {"tokens": t, "lengths": l}, c))
+    toks = np.zeros((B, 32), np.int32)
+    lens = np.array([9, 13, 21, 30], np.int32)
+    for i, l in enumerate(lens):
+        toks[i, :l] = rng.integers(0, cfg.vocab_size, l)
+    cache = m.init_cache(B, S, dtype=jnp.float32)
+    logits, cache = pre(params, jnp.asarray(toks), jnp.asarray(lens), cache)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+
+def test_persistent_equals_scan_foundation():
+    """Dynamic-j while_loop ids and final cache are bit-identical to the
+    static-j scan for every j — the identity the engine path rests on."""
+    cfg, m, params = _model()
+    t0, cache0 = _prefilled_cache(cfg, m, params)
+    dec_multi = jax.jit(m.decode_multi, static_argnames=("j",))
+    dec_pers = jax.jit(m.decode_persistent,
+                       static_argnames=("j_cap", "eos_id"))
+    active = jnp.ones((4,), bool)
+    for j in (1, 3, 6):
+        ref_ids, ref_c = dec_multi(params, t0, dict(cache0), j=j)
+        ids, c, steps = dec_pers(params, t0, dict(cache0),
+                                 jnp.int32(j), active, j_cap=8, eos_id=-1)
+        assert int(steps) == j
+        assert (np.asarray(ids[:j]) == np.asarray(ref_ids)).all()
+        assert (np.asarray(ids[j:]) == 0).all()     # unwritten buffer rows
+        for a, b in zip(jax.tree.leaves(c), jax.tree.leaves(ref_c)):
+            assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_persistent_eos_early_exit():
+    """With eos_id set the loop stops once every ACTIVE row has emitted
+    EOS — and until then the committed prefix stays scan-identical."""
+    cfg, m, params = _model()
+    t0, cache0 = _prefilled_cache(cfg, m, params)
+    dec_multi = jax.jit(m.decode_multi, static_argnames=("j",))
+    dec_pers = jax.jit(m.decode_persistent,
+                       static_argnames=("j_cap", "eos_id"))
+    j = 6
+    ref_ids = np.asarray(dec_multi(params, t0, dict(cache0), j=j)[0])
+    # pick the token row 0 emits at step 2 as EOS and mark ONLY row 0
+    # active: the loop must stop right after that step
+    eos = int(ref_ids[2, 0])
+    active = jnp.asarray([True, False, False, False])
+    ids, _, steps = dec_pers(params, t0, dict(cache0),
+                             jnp.int32(j), active, j_cap=8, eos_id=eos)
+    ids = np.asarray(ids)
+    n = int(steps)
+    assert n <= j
+    assert (ids[:n] == ref_ids[:n]).all()           # prefix scan-identical
+    assert eos in ids[:n, 0]                        # row 0 reached its EOS
+    if n < j:
+        assert (ids[n:] == 0).all()
+    # all rows active and eos_id < 0: always the full j
+    _, _, full = dec_pers(params, t0, dict(cache0), jnp.int32(j),
+                          jnp.ones((4,), bool), j_cap=8, eos_id=-1)
+    assert int(full) == j
+
+
+# ---------------------------------------------------------------------------
+# engine layer: persistent ≡ scan ≡ single-step, both cache layouts
+# ---------------------------------------------------------------------------
+
+def _run_triple(wl, *, eos_id=-1, out_kw=None, **eng_kw):
+    out_kw = out_kw or {}
+    res = {}
+    for name, hp in (
+        ("persistent", HotpathConfig(multi_step=8, persistent=True)),
+        ("scan", HotpathConfig(multi_step=8, persistent=False)),
+        ("single", HotpathConfig(multi_step=1)),
+    ):
+        eng = mk_engine(hotpath=hp, eos_id=eos_id, **eng_kw)
+        out = eng.run(clone(wl), max_iterations=20_000)
+        res[name] = (out, eng)
+    return res
+
+
+def test_persistent_engine_equals_scan_and_single():
+    cfg, _, _ = _model()
+    rng = np.random.default_rng(4)
+    wl = mk_wl(cfg, rng, n=8, out_len=24, stagger=0.15)
+    res = _run_triple(wl)
+    assert_bitforbit(res["persistent"][0], res["scan"][0])
+    assert_bitforbit(res["persistent"][0], res["single"][0])
+    ep, es = res["persistent"][1], res["scan"][1]
+    assert ep.persistent_blocks > 0, "persistent path never engaged"
+    assert ep.persistent_blocks == ep.multi_step_blocks
+    assert es.persistent_blocks == 0
+    # unquantized j: the while_loop never fuses FEWER iterations per block
+    # than the pow-2-quantized scan, so it never syncs more often
+    assert ep.host_syncs <= es.host_syncs
+    assert ep.host_syncs < res["single"][1].host_syncs
+
+
+def test_persistent_engine_eos_truncation():
+    """EOS overshoot: the device may run past the token that finishes a
+    request; the commit replay truncates exactly where single-stepping
+    stops and the length gate rolls the cache back."""
+    cfg, _, _ = _model()
+    rng = np.random.default_rng(6)
+    wl = mk_wl(cfg, rng, n=6, out_len=24, stagger=0.1)
+    probe = mk_engine(hotpath=HotpathConfig(multi_step=1))
+    out = probe.run(clone(wl), max_iterations=20_000)
+    mid_tokens = [t for r in out for t in r.output_tokens[2:-2]]
+    eos = int(np.bincount(np.asarray(mid_tokens)).argmax())
+    res = _run_triple(wl, eos_id=eos)
+    assert any(r.output_tokens and r.output_tokens[-1] == eos
+               and r.generated < r.output_len
+               for r in res["single"][0]), "EOS never fired — vacuous"
+    assert_bitforbit(res["persistent"][0], res["single"][0])
+    assert res["persistent"][1].persistent_blocks > 0
+
+
+def test_persistent_engine_physical_paged():
+    """The persistent loop over the physically paged cache, with pages
+    growing mid-block (small page size forces boundary crossings inside
+    fused blocks): the pre-reservation must cover every in-loop write."""
+    cfg, _, _ = _model()
+    rng = np.random.default_rng(7)
+    wl = mk_wl(cfg, rng, n=8, out_len=20, stagger=0.15)
+    res = _run_triple(wl, page_size=4)
+    ep = res["persistent"][1]
+    assert ep.physical_pages
+    assert ep.persistent_blocks > 0
+    assert_bitforbit(res["persistent"][0], res["scan"][0])
+    assert_bitforbit(res["persistent"][0], res["single"][0])
+    # and physical ≡ accounting-only under the persistent loop
+    acct = mk_engine(hotpath=HotpathConfig(multi_step=8), page_size=4,
+                     physical_pages=False)
+    out_acct = acct.run(clone(wl), max_iterations=20_000)
+    assert_bitforbit(res["persistent"][0], out_acct)
+
+
+# ---------------------------------------------------------------------------
+# speculative blocks: multi-step INSIDE speculation
+# ---------------------------------------------------------------------------
+
+def _run_spec_pair(wl, *, k=2, eos_id=-1, **kw):
+    """Same spec engine, fused-block vs single-round; the acceptance-
+    dependent clock is the thing under test, so the draft is a perturbed
+    copy of the target (realistic partial acceptance)."""
+    from repro.core import SpeculativeLatencyModel
+    cfg, m, params = _model()
+    pert = jax.tree.map(
+        lambda a: a + 1e-3 * jax.random.normal(
+            jax.random.PRNGKey(9), a.shape, a.dtype), params)
+    res = {}
+    for name, hp in (("block", HotpathConfig(multi_step=8, persistent=True)),
+                     ("single", HotpathConfig(multi_step=8,
+                                              persistent=False))):
+        slat = SpeculativeLatencyModel(cfg, TPU_V5E, cfg, k=k)
+        cap = kw.get("capacity_tokens", 8 * 64)
+        sched = make_scheduler("andes", cap, slat, SchedulerConfig())
+        eng = ServingEngine(m, params, sched, slat, num_slots=8, max_seq=64,
+                            draft_model=m, draft_params=pert, spec_k=k,
+                            eos_id=eos_id, hotpath=hp, **kw)
+        out = eng.run(clone(wl), max_iterations=20_000)
+        res[name] = (out, eng)
+    return res
+
+
+def test_spec_block_equals_single_round():
+    """Folding verify rounds into one device while_loop moves no token,
+    timestamp, or scheduling decision: the certificate is spent in tokens
+    (a round consumes up to k+1) and the replay reprices every round's
+    tick at the context acceptance actually reached."""
+    cfg, _, _ = _model()
+    rng = np.random.default_rng(11)
+    wl = mk_wl(cfg, rng, n=8, out_len=18, stagger=0.05)
+    res = _run_spec_pair(wl)
+    assert_bitforbit(res["block"][0], res["single"][0])
+    eb, es = res["block"][1], res["single"][1]
+    assert eb.persistent_blocks > 0, "spec block path never engaged"
+    assert es.persistent_blocks == 0
+    assert eb.host_syncs < es.host_syncs
+    # lossless: every request still runs to completion
+    assert all(r.generated == r.output_len for r in res["block"][0])
+
+
+def test_spec_block_eos_truncation():
+    """An EOS inside a committed round finishes the request mid-block;
+    the replay discards every later round and both length gates (target
+    AND draft cache) roll back — bit-identical to single-round spec."""
+    cfg, _, _ = _model()
+    rng = np.random.default_rng(12)
+    wl = mk_wl(cfg, rng, n=6, out_len=20, stagger=0.05)
+    probe = _run_spec_pair(wl)["single"][0]
+    mid_tokens = [t for r in probe for t in r.output_tokens[2:-2]]
+    eos = int(np.bincount(np.asarray(mid_tokens)).argmax())
+    res = _run_spec_pair(wl, eos_id=eos)
+    assert any(r.output_tokens and r.output_tokens[-1] == eos
+               and r.generated < r.output_len
+               for r in res["single"][0]), "EOS never fired — vacuous"
+    assert_bitforbit(res["block"][0], res["single"][0])
+    assert res["block"][1].persistent_blocks > 0
+
+
+# ---------------------------------------------------------------------------
+# wall-clock multi-step (satellite 1): fused blocks on a real clock
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_wall_multi_step_tolerance():
+    """A wall engine with fused blocks enabled: token text identical to
+    the virtual reference (hard gate), timing within the tolerance spec,
+    and the fast path really engaged. wall_multi_step=False restores the
+    PR 9 single-step wall engine."""
+    cfg, _, _ = _model()
+    rng = np.random.default_rng(8)
+    wl = mk_wl(cfg, rng, n=6, out_len=10, stagger=0.03, plo=5, phi=16)
+    ref_eng = mk_engine(num_slots=4, max_seq=64)
+    ref = ref_eng.run(clone(wl), max_iterations=2000)
+    eng_w = ServingEngine(*_mk_wall_parts(), num_slots=4, max_seq=64,
+                          clock="wall")
+    eng_w.run(clone(wl[:2]), max_iterations=200)        # jit warmup
+    cand = eng_w.run(clone(wl), max_iterations=2000)
+    assert eng_w.multi_step_blocks > 0, "wall fast path never engaged"
+    spec = ToleranceSpec(
+        ttft_mean_diff=Tolerance(abs_tol=0.5),
+        ttft_p95_diff=Tolerance(abs_tol=1.0),
+        ttft_max_diff=Tolerance(abs_tol=2.0),
+        tds_mean_diff=Tolerance(abs_tol=2.0, rel_tol=0.5),
+        qoe_mean_diff=Tolerance(abs_tol=0.30),
+        qoe_max_diff=Tolerance(abs_tol=0.60),
+        qoe_mean_of=Tolerance(abs_tol=0.30),
+    )
+    rep = compare_requests(ref, cand, spec)
+    assert not rep.token_mismatches, rep.summary()
+    assert not rep.missing_rids
+    rep.assert_ok()
+    # the off switch still exists for strict single-step wall serving
+    eng_off = ServingEngine(*_mk_wall_parts(), num_slots=4, max_seq=64,
+                            clock="wall",
+                            hotpath=HotpathConfig(wall_multi_step=False))
+    eng_off.run(clone(wl), max_iterations=2000)
+    assert eng_off.multi_step_blocks == 0
+
+
+def _mk_wall_parts():
+    cfg, m, params = _model()
+    lat = LatencyModel(cfg, TPU_V5E)
+    sched = make_scheduler("andes", 4 * 64, lat, SchedulerConfig())
+    return m, params, sched, lat

@@ -1,0 +1,194 @@
+"""Physically paged KV cache (ISSUE 10 tentpole, part a).
+
+PR 8 made paging an *accounting* layer: `KVSlotManager` priced pages and
+block tables while the device cache stayed one contiguous slab. This PR
+backs the same tables with a real device page pool (models/cache.py
+`init_paged_cache`, kernels/paged_attention.py). The verification spine
+is differential: a physical engine must reproduce the accounting-only
+engine **bit-for-bit** — token ids, emit timestamps, preemption counts,
+final QoE — because the page layout changes where bytes live, never what
+is computed. The sweep covers the degenerate oracles (page_size=1: page
+arithmetic IS token arithmetic) and interior page sizes, uncontended and
+under preemption pressure in both modes, plus chunked prefill and the
+eager (bucketless) prefill path.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import LatencyModel, QoESpec, SchedulerConfig, TPU_V5E, make_scheduler
+from repro.models import Model
+from repro.models import cache as cache_lib
+from repro.serving import HotpathConfig, Request, ServingEngine, fingerprint
+
+
+@pytest.fixture(scope="module")
+def llama():
+    cfg = get_smoke_config("llama3-8b")
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+def _mk_workload(cfg, n, rng, out_len=12, stagger=0.05):
+    wl = []
+    for i in range(n):
+        plen = int(rng.integers(5, 30))
+        wl.append(Request(
+            rid=i, arrival=i * stagger, prompt_len=plen, output_len=out_len,
+            spec=QoESpec(ttft=1.0, tds=4.8),
+            prompt_tokens=rng.integers(0, cfg.vocab_size, plen)))
+    return wl
+
+
+def _run(cfg, m, params, wl, **kw):
+    lat = LatencyModel(cfg, TPU_V5E)
+    sched = make_scheduler(
+        "andes", kw.get("capacity_tokens", 4 * 64), lat,
+        SchedulerConfig(delta_t=kw.pop("delta_t", 50.0)))
+    eng = ServingEngine(m, params, sched, lat,
+                        num_slots=kw.pop("num_slots", 4), max_seq=64, **kw)
+    out = eng.run([r.clone() for r in wl], max_iterations=4000)
+    return out, eng
+
+
+# ---------------------------------------------------------------------------
+# construction: capability detection and layout
+# ---------------------------------------------------------------------------
+
+def test_physical_auto_on_for_paged_dense(llama):
+    cfg, m, params = llama
+    lat = LatencyModel(cfg, TPU_V5E)
+    sched = make_scheduler("andes", 256, lat, SchedulerConfig())
+    eng = ServingEngine(m, params, sched, lat, num_slots=4, max_seq=64,
+                        capacity_tokens=256, page_size=16)
+    assert eng.physical_pages
+    assert cache_lib.is_paged(eng.cache)
+    # pool size IS the admission capacity, in pages
+    assert eng.cache["k"].shape[1] == eng._pool_pages == eng.kv.total_pages
+    assert eng.cache["k"].shape[2] == 16
+    # contiguous engines keep the slab layout
+    sched2 = make_scheduler("andes", 256, lat, SchedulerConfig())
+    eng2 = ServingEngine(m, params, sched2, lat, num_slots=4, max_seq=64,
+                         capacity_tokens=256)
+    assert not eng2.physical_pages
+    assert not cache_lib.is_paged(eng2.cache)
+
+
+def test_physical_flag_validation(llama):
+    cfg, m, params = llama
+    lat = LatencyModel(cfg, TPU_V5E)
+
+    def mk(**kw):
+        sched = make_scheduler("andes", 256, lat, SchedulerConfig())
+        return ServingEngine(m, params, sched, lat, num_slots=4, max_seq=64,
+                             capacity_tokens=256, **kw)
+
+    with pytest.raises(ValueError, match="paged engine"):
+        mk(physical_pages=True)                     # no page_size
+    # explicit False forces accounting-only even when auto would say yes
+    eng = mk(page_size=16, physical_pages=False)
+    assert not eng.physical_pages
+    assert not cache_lib.is_paged(eng.cache)
+    assert eng.kv.paged                             # accounting still pages
+
+
+def test_physical_unsupported_family_falls_back():
+    cfg = get_smoke_config("falcon-mamba-7b")       # ssm: no KV to page
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    lat = LatencyModel(cfg, TPU_V5E)
+    sched = make_scheduler("andes", 256, lat, SchedulerConfig())
+    eng = ServingEngine(m, params, sched, lat, num_slots=4, max_seq=64,
+                        capacity_tokens=256, page_size=16)
+    assert not eng.physical_pages                   # auto declines
+    with pytest.raises(ValueError, match="does not support"):
+        ServingEngine(m, params,
+                      make_scheduler("andes", 256, lat, SchedulerConfig()),
+                      lat, num_slots=4, max_seq=64, capacity_tokens=256,
+                      page_size=16, physical_pages=True)
+
+
+# ---------------------------------------------------------------------------
+# differential oracles: physical ≡ accounting-only, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("page_size", [1, 16])
+def test_physical_vs_accounting_uncontended(llama, page_size):
+    """Same page_size, same scheduler view — only the byte layout differs.
+    page_size=1 additionally chains to PR 8's oracle: accounting-paged ≡
+    unpaged, so physical ≡ the original contiguous engine transitively."""
+    cfg, m, params = llama
+    rng = np.random.default_rng(0)
+    wl = _mk_workload(cfg, 6, rng)
+    acct, eng_a = _run(cfg, m, params, wl, page_size=page_size,
+                       physical_pages=False)
+    phys, eng_p = _run(cfg, m, params, wl, page_size=page_size)
+    assert eng_p.physical_pages and not eng_a.physical_pages
+    assert eng_p.page_scatters > 0, "prefill never hit the pool"
+    assert fingerprint(phys) == fingerprint(acct)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mode", ["swap", "recompute"])
+def test_physical_vs_accounting_contended(llama, mode):
+    """Preemption pressure: eviction must free real rows (swap gathers
+    pages to host and re-scatters on swap-in; recompute drops and
+    re-prefills into whatever pages the pool hands back) without moving
+    a single scheduling decision or token."""
+    cfg, m, params = llama
+    rng = np.random.default_rng(1)
+    wl = _mk_workload(cfg, 8, rng, out_len=15, stagger=0.01)
+    acct, eng_a = _run(cfg, m, params, wl, num_slots=2, capacity_tokens=100,
+                       preemption_mode=mode, delta_t=5.0, page_size=8,
+                       physical_pages=False)
+    assert eng_a.preemptions > 0, "test requires contention"
+    phys, eng_p = _run(cfg, m, params, wl, num_slots=2, capacity_tokens=100,
+                       preemption_mode=mode, delta_t=5.0, page_size=8)
+    assert eng_p.preemptions == eng_a.preemptions
+    if mode == "swap":
+        assert eng_p.page_gathers > 0
+        assert eng_p.page_gather_bytes > 0
+    assert fingerprint(phys) == fingerprint(acct)
+
+
+def test_physical_chunked_prefill_differential(llama):
+    """Chunked admission grows a resident's table one chunk at a time;
+    every chunk's recomputed prefix must land in the (possibly moved)
+    pages the manager currently assigns."""
+    cfg, m, params = llama
+    rng = np.random.default_rng(2)
+    wl = _mk_workload(cfg, 6, rng)
+    acct, _ = _run(cfg, m, params, wl, page_size=8, prefill_chunk=8,
+                   physical_pages=False)
+    phys, eng_p = _run(cfg, m, params, wl, page_size=8, prefill_chunk=8)
+    assert eng_p.physical_pages
+    assert fingerprint(phys) == fingerprint(acct)
+
+
+def test_physical_eager_prefill_differential(llama):
+    """The bucketless (eager exact-length) prefill path — what MoE and
+    the benchmark baseline run — commits through its own paged branch."""
+    cfg, m, params = llama
+    rng = np.random.default_rng(3)
+    wl = _mk_workload(cfg, 5, rng)
+    hp = HotpathConfig(prefill_buckets=False, multi_step=1)
+    acct, _ = _run(cfg, m, params, wl, page_size=16, physical_pages=False,
+                   hotpath=hp)
+    phys, eng_p = _run(cfg, m, params, wl, page_size=16, hotpath=hp)
+    assert eng_p.physical_pages
+    assert fingerprint(phys) == fingerprint(acct)
+
+
+def test_pool_drains_after_run(llama):
+    """Admission capacity is physical now: when the workload drains, every
+    page is back in the pool and the device tables are all-sentinel on
+    the next refresh."""
+    cfg, m, params = llama
+    rng = np.random.default_rng(4)
+    wl = _mk_workload(cfg, 5, rng)
+    _, eng = _run(cfg, m, params, wl, page_size=8)
+    assert eng.kv.pages_used == 0
+    assert eng.kv.physical_pages_used == 0
+    assert sorted(eng.kv.free_pages) == list(range(eng.kv.total_pages))
